@@ -1,0 +1,41 @@
+"""Shared helpers for the CIM benchmark scripts."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.cimsim import perf                                   # noqa: E402
+from repro.core import baselines, compiler                      # noqa: E402
+from repro.core.abstraction import get_arch                     # noqa: E402
+from repro.workloads import get_workload                        # noqa: E402
+
+
+def run_policy(workload, arch, policy: str, level=None):
+    """policy in {ours, no_opt, native, poly, cg_pipe, cg_dup}."""
+    g = get_workload(workload) if isinstance(workload, str) else workload
+    if policy == "ours":
+        plan = compiler.compile_graph(g, arch, level=level).plan
+    elif policy == "no_opt":
+        plan = baselines.no_opt(g, arch)
+    elif policy == "native":
+        plan = baselines.native(g, arch)
+    elif policy == "poly":
+        plan = baselines.poly_schedule(g, arch)
+    elif policy == "cg_pipe":      # pipeline only, no duplication
+        plan = compiler.compile_graph(g, arch, level="CM",
+                                      use_duplication=False).plan
+    elif policy == "cg_dup":       # duplication only, no pipeline
+        plan = compiler.compile_graph(g, arch, level="CM",
+                                      use_pipeline=False).plan
+    else:
+        raise ValueError(policy)
+    return perf.estimate(plan)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,47 @@
+"""Figure 21 — multi-level ablation on the ISAAC-like Table-3 baseline,
+ResNet series.
+
+(a) CG-grained arms (pipeline / duplication / P&D) vs no-opt
+    [paper: pipeline 2.3-4.7x, duplication 25.4->3.1x, P&D up to 123x]
+(b) +MVM-grained over CG-P&D                [paper: ~1.8x R50, 1.4x R101]
+(c) +VVM-grained over +MVM                  [paper: ~10% R50]
+(d) normalized peak power: CG vs +MVM       [paper: CG 5-16x, MVM -85%]
+"""
+from __future__ import annotations
+
+from cim_common import get_arch, run_policy
+
+NETS = ("resnet18", "resnet34", "resnet50", "resnet101")
+
+
+def rows():
+    arch = get_arch("isaac-baseline")
+    out = []
+    for wl in NETS:
+        noopt = run_policy(wl, arch, "no_opt")
+        pipe = run_policy(wl, arch, "cg_pipe")
+        dup = run_policy(wl, arch, "cg_dup")
+        pd = run_policy(wl, arch, "ours", level="CM")
+        mvm = run_policy(wl, arch, "ours", level="XBM")
+        vvm = run_policy(wl, arch, "ours", level="WLM")
+        base = noopt.latency_cycles
+        out += [
+            (f"fig21a_{wl}_cg_pipeline_x", base / pipe.latency_cycles, ""),
+            (f"fig21a_{wl}_cg_duplication_x", base / dup.latency_cycles, ""),
+            (f"fig21a_{wl}_cg_pd_x", base / pd.latency_cycles, ""),
+            (f"fig21b_{wl}_mvm_over_cg_x",
+             pd.latency_cycles / mvm.latency_cycles, ""),
+            (f"fig21c_{wl}_vvm_over_mvm_x",
+             mvm.latency_cycles / vvm.latency_cycles, ""),
+            (f"fig21d_{wl}_peak_power_cg_vs_noopt_x",
+             pd.peak_active_xbs / max(noopt.peak_active_xbs, 1), ""),
+            (f"fig21d_{wl}_peak_power_mvm_reduction_pct",
+             100 * (1 - mvm.peak_active_xbs / max(pd.peak_active_xbs, 1)),
+             "paper up to 85%"),
+        ]
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, note in rows():
+        print(f"{name},{val:.3f},{note}")

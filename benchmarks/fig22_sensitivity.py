@@ -1,0 +1,58 @@
+"""Figure 22 — CIM architecture sensitivity on ViT (crossbar 128x256
+variant of the Table-3 baseline).
+
+(a) core count 256 -> 1024     [paper: CG speedup 15x -> 30x]
+(b) crossbars per core 2 -> 8
+(c) crossbar size 64x512 ... 512x64
+(d) parallel rows 8 -> 128     [paper: VVM ~20% over MVM at 8 rows]
+"""
+from __future__ import annotations
+
+from cim_common import get_arch, run_policy
+from repro.core.abstraction import ChipTier, CoreTier, CrossbarTier
+
+
+def _variant(core_number=(32, 32), xb_number=(2, 4), xb_size=(128, 256),
+             parallel_row=8):
+    return get_arch("isaac-baseline").replace(
+        chip=ChipTier(core_number=core_number, alu_ops_per_cycle=1024,
+                      l0_bw_bits=8192),
+        core=CoreTier(xb_number=xb_number, alu_ops_per_cycle=1024,
+                      l1_bw_bits=8192),
+        xb=CrossbarTier(xb_size=xb_size, dac_bits=1, adc_bits=8,
+                        cell_precision=2, parallel_row=parallel_row),
+    )
+
+
+def _levels(arch):
+    noopt = run_policy("vit", arch, "no_opt")
+    base = noopt.latency_cycles
+    return {lvl: base / run_policy("vit", arch, "ours",
+                                   level=lvl).latency_cycles
+            for lvl in ("CM", "XBM", "WLM")}
+
+
+def rows():
+    out = []
+    for n in (256, 512, 1024):
+        s = _levels(_variant(core_number=(n // 16, 16)))
+        for lvl, x in s.items():
+            out.append((f"fig22a_cores{n}_{lvl}_x", x, ""))
+    for xbs in (2, 4, 8):
+        s = _levels(_variant(xb_number=(xbs, 1)))
+        for lvl, x in s.items():
+            out.append((f"fig22b_xbs{xbs}_{lvl}_x", x, ""))
+    for size in ((64, 512), (128, 256), (256, 128), (512, 64)):
+        s = _levels(_variant(xb_size=size))
+        for lvl, x in s.items():
+            out.append((f"fig22c_xb{size[0]}x{size[1]}_{lvl}_x", x, ""))
+    for pr in (8, 16, 32, 128):
+        s = _levels(_variant(parallel_row=pr))
+        out.append((f"fig22d_pr{pr}_vvm_over_mvm_x",
+                    s["WLM"] / s["XBM"], "paper ~1.2x at pr=8"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, note in rows():
+        print(f"{name},{val:.3f},{note}")

@@ -1,0 +1,34 @@
+"""cim_mvm kernel micro-benchmark (interpret mode on CPU; the numbers
+locate the oracle/kernel overhead, not TPU performance)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from cim_common import timed
+from repro.kernels.cim_mvm import cim_mvm, CimMvmParams
+
+
+def rows():
+    out = []
+    p = CimMvmParams(8, 8, 1, 2, 8, 8)
+    rng = np.random.default_rng(0)
+    for (m, r, c) in ((64, 128, 128), (128, 1152, 256)):
+        x = jnp.asarray(rng.integers(0, 256, (m, r)), jnp.int32)
+        w = jnp.asarray(rng.integers(0, 256, (r, c)), jnp.int32)
+        for use_kernel, tag in ((True, "pallas_interpret"), (False, "oracle")):
+            cim_mvm(x, w, p, use_kernel=use_kernel).block_until_ready()
+            t0 = time.time()
+            n = 3
+            for _ in range(n):
+                cim_mvm(x, w, p, use_kernel=use_kernel).block_until_ready()
+            us = (time.time() - t0) / n * 1e6
+            out.append((f"kernel_{tag}_{m}x{r}x{c}_us", us, ""))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, note in rows():
+        print(f"{name},{val:.1f},{note}")

@@ -1,0 +1,109 @@
+"""§Perf hillclimbing driver: measure each optimization lever on the
+three chosen cells and log hypothesis -> change -> before -> after.
+
+Cells (chosen per the §Perf rubric):
+  * gemma2-2b x train_4k      — most collective-bound baseline
+  * qwen1.5-4b x decode_32k   — worst roofline fraction (decode family)
+  * mixtral-8x7b x train_4k   — most representative of the paper's
+    technique (operator duplication / expert mapping <-> CG duplication)
+
+Run:  PYTHONPATH=src python benchmarks/perf_iterations.py [--cell N]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis import roofline                       # noqa: E402
+from repro.configs import get_config                      # noqa: E402
+from repro.configs.base import SHAPES                     # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.steps import build_cell                 # noqa: E402
+from repro.models.perfopts import PerfOpts                # noqa: E402
+
+CELLS = [("gemma2-2b", "train_4k"), ("qwen1.5-4b", "decode_32k"),
+         ("mixtral-8x7b", "train_4k")]
+
+VARIANTS = {
+    "baseline": PerfOpts(),
+    "reshard": PerfOpts(attn_reshard="auto"),
+    "triangular": PerfOpts(triangular_attention=True),
+    "reshard+triangular": PerfOpts(attn_reshard="auto",
+                                   triangular_attention=True),
+    "reshard+tri+dots": PerfOpts(attn_reshard="auto",
+                                 triangular_attention=True,
+                                 remat_policy="dots"),
+    "decode_opt": PerfOpts(decode_opt=True),
+    "reshard+tri+dots+moecap": PerfOpts(attn_reshard="auto",
+                                        triangular_attention=True,
+                                        remat_policy="dots",
+                                        moe_capacity_shard=True),
+}
+
+OUT = Path(__file__).resolve().parent.parent / "experiments/perf_iterations.json"
+
+
+def measure(arch, shape_name, variant, opts):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    t0 = time.time()
+    with mesh:
+        cell = build_cell(cfg, shape, mesh, perf=opts)
+        compiled = cell.lower().compile()
+        ma = compiled.memory_analysis()
+        coll = roofline.parse_collectives(compiled.as_text(), 256)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "walked_flops": coll["walked_flops"],
+           "walked_hbm_bytes": coll["walked_hbm_bytes"],
+           "collective_bytes": coll["total_bytes"],
+           "collective_count": coll["count"],
+           "temp_bytes": int(ma.temp_size_in_bytes),
+           "compile_s": round(time.time() - t0, 1)}
+    rec.update(roofline.terms(rec, cfg, shape, 256))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", type=int, default=None)
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    cells = CELLS if args.cell is None else [CELLS[args.cell]]
+    records = json.loads(OUT.read_text()) if OUT.exists() else []
+    done = {(r["arch"], r["shape"], r["variant"]) for r in records}
+    for arch, shape in cells:
+        for variant, opts in VARIANTS.items():
+            if args.variant and variant != args.variant:
+                continue
+            if (arch, shape, variant) in done:
+                continue
+            print(f"[perf] {arch} x {shape} :: {variant}", flush=True)
+            try:
+                rec = measure(arch, shape, variant, opts)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "variant": variant,
+                       "error": f"{type(e).__name__}: {e}"}
+            records.append(rec)
+            OUT.parent.mkdir(parents=True, exist_ok=True)
+            OUT.write_text(json.dumps(records, indent=1))
+            ok = "error" not in rec
+            if ok:
+                print(f"  compute={rec['compute_s']:.2f}s "
+                      f"memory={rec['memory_s']:.2f}s "
+                      f"coll={rec['collective_s']:.2f}s "
+                      f"frac={rec['roofline_frac']:.5f} "
+                      f"temp={rec['temp_bytes']/2**30:.1f}GiB")
+            else:
+                print("  ERROR:", rec["error"])
+
+
+if __name__ == "__main__":
+    main()

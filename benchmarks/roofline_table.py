@@ -1,0 +1,56 @@
+"""§Roofline — render the dry-run records (experiments/dryrun.json) as
+the per-(arch x shape x mesh) roofline table."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+DEFAULT = Path(__file__).resolve().parent.parent / "experiments/dryrun.json"
+
+
+def load(path=DEFAULT):
+    recs = json.loads(Path(path).read_text())
+    return sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def table(path=DEFAULT, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| useful_flops | roofline_frac | temp_GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(path):
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL: "
+                         f"{r.get('error','?')[:60]} | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| {r['bottleneck']} | {r['useful_flops_frac']:.3f} "
+            f"| {r['roofline_frac']:.4f} | {r['temp_bytes']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def rows(path=DEFAULT):
+    out = []
+    for r in load(path):
+        if r.get("status") != "ok":
+            out.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                        float("nan"), "FAIL"))
+            continue
+        out.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                    r["roofline_frac"],
+                    f"bottleneck={r['bottleneck']}"))
+    return out
+
+
+if __name__ == "__main__":
+    print(table())
+    print()
+    print(table(mesh="2x16x16"))

@@ -1,0 +1,44 @@
+"""Benchmark aggregator — one section per paper table/figure plus the
+harness-required roofline table.  Prints ``name,value,note`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+
+def main() -> None:
+    import fig20_generality
+    import fig21_ablation
+    import fig22_sensitivity
+    import kernel_bench
+    import roofline_table
+
+    sections = [
+        ("fig20 (generality: Jia/PUMA/Jain/Poly-Schedule)",
+         fig20_generality.rows),
+        ("fig21 (ResNet multi-level ablation)", fig21_ablation.rows),
+        ("fig22 (architecture sensitivity, ViT)", fig22_sensitivity.rows),
+        ("kernels (cim_mvm)", kernel_bench.rows),
+    ]
+    print("name,value,note")
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        t0 = time.time()
+        for name, val, note in fn():
+            print(f"{name},{val:.4g},{note}")
+        print(f"# ({time.time()-t0:.1f}s)")
+
+    print("# --- roofline (from experiments/dryrun.json) ---")
+    try:
+        for name, val, note in roofline_table.rows():
+            print(f"{name},{val:.4g},{note}")
+    except FileNotFoundError:
+        print("# run `python -m repro.launch.dryrun --all` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .checkpoint import (save_checkpoint, restore_checkpoint,  # noqa
+                         restore_resharded, latest_checkpoint,
+                         CheckpointManager)

@@ -1,0 +1,2 @@
+# CIM simulators: functional (meta-op flow -> numerics) and performance
+# (cycles / peak power), per §4.1 of the paper.

@@ -1,0 +1,475 @@
+"""Functional simulator (§4.1): interprets the meta-operator flow.
+
+The paper verifies its compiler by executing the generated meta-operator
+flows in a functional simulator and comparing against a reference
+framework (they use PyTorch; offline we use a pure-NumPy/JAX int8
+fake-quant reference, ``reference_forward``).
+
+The simulator walks the *expanded* Program op by op:
+
+  * ``cim.write_xb`` / ``cim.write_row`` load quantized weight tiles into
+    a crossbar store;
+  * ``cim.read_xb`` / ``cim.read_row`` perform one analog activation —
+    the bit-sliced, parallel-row-grouped, ADC-saturating MVM of
+    kernels/cim_mvm (ref semantics; the Pallas kernel computes the same
+    function and is swept against it in tests) — and accumulate partial
+    sums;
+  * ``cim.read_core`` executes a whole operator on a core (CM chips);
+  * DCOM ops apply the digital operators; ``mov`` is bookkeeping.
+
+Equality with the reference is bit-exact whenever the ADC does not
+saturate (``CimMvmParams.exact``); with a narrow ADC the simulator
+reports the (hardware-true) saturated results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.abstraction import CIMArch, ComputingMode
+from ..core.cg_opt import OpPlacement, SchedulePlan
+from ..core.graph import Graph, Node, weight_matrix_shape
+from ..core.mapping import logical_cols_per_xb, row_tile_rows
+from ..core.mop import MetaOp, Program
+from ..kernels.cim_mvm import cim_mvm_params, CimMvmParams
+from ..kernels.cim_mvm import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (shared verbatim by simulator and reference)
+# ---------------------------------------------------------------------------
+
+def requant(y32: np.ndarray, shift: int) -> np.ndarray:
+    """int32 accumulator -> int8 tensor via arithmetic right-shift."""
+    return np.clip(y32 >> shift, -128, 127).astype(np.int32)
+
+
+def pick_shift(y32: np.ndarray) -> int:
+    m = int(np.abs(y32).max()) if y32.size else 0
+    if m <= 127:
+        return 0
+    return max(0, int(math.ceil(math.log2((m + 1) / 127.0))))
+
+
+def make_weights(graph: Graph, seed: int = 0,
+                 bits: int = 8) -> Dict[str, np.ndarray]:
+    """Deterministic signed int weights (R, C) per CIM node."""
+    out = {}
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1))
+    for node in graph.cim_nodes:
+        r, c = weight_matrix_shape(node)
+        rng = np.random.default_rng(abs(hash((node.name, seed))) % (2 ** 32))
+        out[node.name] = rng.integers(lo, hi, (r, c)).astype(np.int32)
+    return out
+
+
+def make_input(graph: Graph, seed: int = 0, bits: int = 8) -> Dict[str, np.ndarray]:
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1))
+    rng = np.random.default_rng(seed)
+    return {name: rng.integers(lo, hi, shape).astype(np.int32)
+            for name, shape in graph.inputs.items()}
+
+
+def im2col(x: np.ndarray, k: int, stride: int, pad: int) -> np.ndarray:
+    """(C,H,W) -> (H_out*W_out, C*k*k) patch matrix (weight-matrix order)."""
+    c, h, w = x.shape
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    rows = np.empty((oh * ow, c * k * k), dtype=x.dtype)
+    idx = 0
+    for i in range(oh):
+        for j in range(ow):
+            patch = xp[:, i * stride:i * stride + k, j * stride:j * stride + k]
+            rows[idx] = patch.reshape(-1)
+            idx += 1
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Reference executor (int8 fake-quant, exact integer matmuls)
+# ---------------------------------------------------------------------------
+
+def _float_dcom(op_type: str, xs: List[np.ndarray],
+                node: Node) -> np.ndarray:
+    x = xs[0].astype(np.float64)
+    if op_type == "Gelu":
+        return x * 0.5 * (1.0 + np.tanh(0.7978845608 * (x + 0.044715 * x ** 3)))
+    if op_type == "Silu":
+        return x / (1.0 + np.exp(-x))
+    if op_type == "Sigmoid":
+        return 1.0 / (1.0 + np.exp(-x))
+    if op_type == "Tanh":
+        return np.tanh(x)
+    if op_type == "Softmax":
+        e = np.exp(x - x.max(axis=-1, keepdims=True))
+        return e / e.sum(axis=-1, keepdims=True)
+    if op_type in ("LayerNorm", "RMSNorm"):
+        if op_type == "LayerNorm":
+            x = x - x.mean(axis=-1, keepdims=True)
+        return x / np.sqrt((x ** 2).mean(axis=-1, keepdims=True) + 1e-6)
+    raise ValueError(f"no float DCOM for {op_type}")
+
+
+def apply_dcom(node: Node, xs: List[np.ndarray], graph: Graph,
+               shifts: Dict[str, int],
+               calibrating: bool) -> np.ndarray:
+    """Digital operator semantics shared by simulator and reference."""
+    t = node.op_type
+    if t == "Relu":
+        return np.maximum(xs[0], 0)
+    if t == "Add":
+        y = xs[0].astype(np.int64) + xs[1].astype(np.int64)
+        sh = _shift_for(node, y, shifts, calibrating)
+        return requant(y.astype(np.int64) >> 0, 0) if sh == 0 \
+            else np.clip(y >> sh, -128, 127).astype(np.int32)
+    if t == "Mul":
+        y = xs[0].astype(np.int64) * xs[1].astype(np.int64)
+        sh = _shift_for(node, y, shifts, calibrating)
+        return np.clip(y >> sh, -128, 127).astype(np.int32)
+    if t == "MaxPool":
+        return _pool(xs[0], node, np.max)
+    if t in ("AveragePool", "GlobalAveragePool"):
+        if t == "GlobalAveragePool":
+            return (xs[0].sum(axis=(1, 2), keepdims=True)
+                    // (xs[0].shape[1] * xs[0].shape[2])).astype(np.int32)
+        return _pool(xs[0], node, lambda a, axis: a.sum(axis=axis)
+                     // (node.attrs.get("kernel", 2) ** 2))
+    if t == "Flatten":
+        return xs[0].reshape(-1)
+    if t == "Reshape":
+        return xs[0].reshape(node.attrs["shape"])
+    if t == "Identity":
+        return xs[0]
+    if t == "Transpose":
+        return xs[0].transpose(node.attrs["perm"])
+    if t == "Concat":
+        return np.concatenate(xs, axis=node.attrs.get("axis", -1))
+    if t == "MatMul":
+        b = xs[1].T if node.attrs.get("transpose_b") else xs[1]
+        y = xs[0].astype(np.int64) @ b.astype(np.int64)
+        sh = _shift_for(node, y, shifts, calibrating)
+        return np.clip(y >> sh, -128, 127).astype(np.int32)
+    # float fallback ops re-quantized to int8 grid
+    y = _float_dcom(t, xs, node)
+    return np.clip(np.round(y * 32.0), -128, 127).astype(np.int32)
+
+
+def _shift_for(node: Node, y, shifts: Dict[str, int],
+               calibrating: bool) -> int:
+    if calibrating:
+        shifts[node.name] = pick_shift(np.asarray(y))
+    return shifts.get(node.name, 0)
+
+
+def _pool(x: np.ndarray, node: Node, reducer) -> np.ndarray:
+    k = node.attrs.get("kernel", 2)
+    stride = node.attrs.get("stride", k)
+    pad = node.attrs.get("pad", 0)
+    c, h, w = x.shape
+    if pad:
+        fill = -(2 ** 31) if reducer is np.max else 0
+        x = np.pad(x, ((0, 0), (pad, pad), (pad, pad)),
+                   constant_values=fill)
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    out = np.empty((c, oh, ow), dtype=np.int32)
+    for i in range(oh):
+        for j in range(ow):
+            win = x[:, i * stride:i * stride + k, j * stride:j * stride + k]
+            out[:, i, j] = reducer(win.reshape(c, -1), axis=-1)
+    return out
+
+
+def reference_forward(graph: Graph, weights: Dict[str, np.ndarray],
+                      inputs: Dict[str, np.ndarray],
+                      shifts: Optional[Dict[str, int]] = None,
+                      mvm=None) -> Tuple[Dict[str, np.ndarray], Dict[str, int]]:
+    """Pure int8 fake-quant forward pass.
+
+    ``mvm(x_rows, w) -> int32`` defaults to the exact integer matmul;
+    passing kernels/cim_mvm's signed op makes the reference share the
+    crossbar compute semantics (for saturating-ADC comparisons).
+    Returns (tensors, calibrated shifts).
+    """
+    calibrating = shifts is None
+    shifts = {} if shifts is None else dict(shifts)
+    if mvm is None:
+        def mvm(x_rows, w):
+            return x_rows.astype(np.int64) @ w.astype(np.int64)
+    tensors: Dict[str, np.ndarray] = dict(inputs)
+    for node in graph.nodes:
+        xs = [tensors[t] for t in node.inputs]
+        if node.is_cim:
+            w = weights[node.name]
+            if node.op_type == "Conv":
+                k = node.attrs["weight_shape"][2]
+                rows = im2col(xs[0], k, node.attrs.get("stride", 1),
+                              node.attrs.get("pad", 0))
+                y = np.asarray(mvm(rows, w))
+                sh = _shift_for(node, y, shifts, calibrating)
+                y = np.clip(y >> sh, -128, 127).astype(np.int32)
+                cout = node.attrs["weight_shape"][0]
+                oh, ow = graph.shapes[node.outputs[0]][1:]
+                y = y.T.reshape(cout, oh, ow)
+            else:
+                rows = xs[0][None] if xs[0].ndim == 1 else xs[0]
+                y = np.asarray(mvm(rows, w))
+                sh = _shift_for(node, y, shifts, calibrating)
+                y = np.clip(y >> sh, -128, 127).astype(np.int32)
+                y = y[0] if xs[0].ndim == 1 else y
+            tensors[node.outputs[0]] = y
+        else:
+            tensors[node.outputs[0]] = apply_dcom(node, xs, graph, shifts,
+                                                  calibrating)
+    return tensors, shifts
+
+
+# ---------------------------------------------------------------------------
+# The meta-operator flow interpreter
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimStats:
+    cim_reads: int = 0
+    cim_writes: int = 0
+    dcom_ops: int = 0
+    mov_bytes: int = 0
+
+
+class FunctionalSimulator:
+    """Executes an expanded meta-operator flow for one inference."""
+
+    def __init__(self, plan: SchedulePlan, program: Program,
+                 weights: Dict[str, np.ndarray],
+                 shifts: Dict[str, int],
+                 params: Optional[CimMvmParams] = None):
+        self.plan = plan
+        self.graph: Graph = plan.graph
+        self.arch: CIMArch = plan.arch
+        self.program = program
+        self.weights = weights
+        self.shifts = shifts
+        self.params = params or cim_mvm_params(plan.arch)
+        self.stats = SimStats()
+        self._placement: Dict[Tuple[str, int], OpPlacement] = {}
+        for p in plan.placements:
+            self._placement[(p.node.name, p.chunk)] = p
+        self._rows_cache: Dict[str, np.ndarray] = {}
+        self._acc: Dict[str, np.ndarray] = {}       # int64 accumulators
+        self._acc_pending: Dict[str, bool] = {}
+
+    # -- crossbar-level MVM with the CIM compute semantics ---------------
+    def _cim_mvm(self, x_rows: np.ndarray, w: np.ndarray,
+                 parallel_row: Optional[int] = None) -> np.ndarray:
+        import jax.numpy as jnp
+        p = self.params
+        if parallel_row is not None:
+            p = dataclasses.replace(p, parallel_row=parallel_row)
+        ox = 1 << (p.act_bits - 1)
+        ow = 1 << (p.weight_bits - 1)
+        x_u = x_rows.astype(np.int64) + ox
+        w_u = w.astype(np.int64) + ow
+        y_u = np.asarray(kref.cim_mvm_ref(
+            jnp.asarray(x_u, jnp.int32), jnp.asarray(w_u, jnp.int32),
+            act_bits=p.act_bits, weight_bits=p.weight_bits,
+            dac_bits=p.dac_bits, cell_bits=p.cell_bits,
+            parallel_row=p.parallel_row, adc_bits=p.adc_bits)).astype(np.int64)
+        r = x_rows.shape[-1]
+        sx = x_u.sum(axis=-1, keepdims=True)
+        sw = w_u.sum(axis=0, keepdims=True)
+        return y_u - ow * sx - ox * sw + r * ox * ow
+
+    # -- tensor store -----------------------------------------------------
+    def _tensor(self, name: str) -> np.ndarray:
+        prod = self.graph.producer(name)
+        if prod is not None and self._acc_pending.get(prod.name):
+            self._finalize(prod)
+        return self._tensors[name]
+
+    def _finalize(self, node: Node) -> None:
+        y = self._acc[node.name]
+        sh = self.shifts.get(node.name, 0)
+        y = np.clip(y >> sh, -128, 127).astype(np.int32)
+        if node.op_type == "Conv":
+            cout = node.attrs["weight_shape"][0]
+            oh, ow = self.graph.shapes[node.outputs[0]][1:]
+            y = y.T.reshape(cout, oh, ow)
+        else:
+            x_shape = self.graph.shapes[node.inputs[0]]
+            if len(x_shape) == 1:
+                y = y[0]
+        self._tensors[node.outputs[0]] = y
+        self._acc_pending[node.name] = False
+
+    def _input_rows(self, node: Node) -> np.ndarray:
+        if node.name in self._rows_cache:
+            return self._rows_cache[node.name]
+        x = self._tensor(node.inputs[0])
+        if node.op_type == "Conv":
+            k = node.attrs["weight_shape"][2]
+            rows = im2col(x, k, node.attrs.get("stride", 1),
+                          node.attrs.get("pad", 0))
+        else:
+            rows = x[None] if x.ndim == 1 else x
+        self._rows_cache[node.name] = rows
+        return rows
+
+    def _tile_ranges(self, p: OpPlacement, rt: int, ct: int):
+        """Row/col index ranges of tile (rt, ct) of a chunk's sub-matrix."""
+        arch = self.arch
+        m = p.mapping
+        r0 = rt * arch.xb.rows
+        r1 = min(r0 + arch.xb.rows, m.r)
+        cpx = logical_cols_per_xb(m, arch)
+        c0 = ct * cpx
+        c1 = min(c0 + cpx, m.c)
+        return r0, r1, c0, c1
+
+    def _chunk_offsets(self, node: Node, p: OpPlacement):
+        """Global (row, col) offset of a chunk inside the full matrix."""
+        r, c = weight_matrix_shape(node)
+        sub_r, sub_c = p.mapping.r, p.mapping.c
+        cc = math.ceil(c / sub_c)
+        ci, ri = p.chunk % cc, p.chunk // cc
+        return ri * sub_r, ci * sub_c
+
+    # -- execution ---------------------------------------------------------
+    def run(self, inputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        self._tensors: Dict[str, np.ndarray] = dict(inputs)
+        self._rows_cache.clear()
+        self._acc.clear()
+        for op in self.program.walk(expand_loops=True):
+            self._exec(op)
+        # finalize any pending accumulators and run to the graph outputs
+        for node in self.graph.nodes:
+            if self._acc_pending.get(node.name):
+                self._finalize(node)
+        return {t: self._tensor(t) for t in self.graph.outputs}
+
+    def _exec(self, op: MetaOp) -> None:
+        k = op.kind
+        a = op.attrs
+        if k in ("cim.write_xb", "cim.write_row"):
+            self.stats.cim_writes += 1
+            return                      # weights are addressed by attrs
+        if k == "mov":
+            self.stats.mov_bytes += int(a.get("len", 0))
+            return
+        if k == "cim.read_core":
+            self._read_core(a)
+            return
+        if k in ("cim.read_xb", "cim.read_row"):
+            self._read_tile(a, wlm=(k == "cim.read_row"))
+            return
+        # DCOM
+        self.stats.dcom_ops += 1
+        if k == "shift_acc":
+            return                      # folded into the accumulation
+        node = self.graph.node(a["node"]) if "node" in a else None
+        if node is None:
+            return
+        xs = [self._tensor(t) for t in node.inputs]
+        self._tensors[node.outputs[0]] = apply_dcom(
+            node, xs, self.graph, self.shifts, calibrating=False)
+        if node.op_type == "Split":
+            raise NotImplementedError("Split in functional sim")
+
+    def _acc_for(self, node: Node) -> np.ndarray:
+        if node.name not in self._acc:
+            rows = self._input_rows(node)
+            r, c = weight_matrix_shape(node)
+            n = rows.shape[0]
+            self._acc[node.name] = np.zeros((n, c), np.int64)
+        self._acc_pending[node.name] = True
+        return self._acc[node.name]
+
+    def _read_core(self, a: Dict) -> None:
+        self.stats.cim_reads += 1
+        node = self.graph.node(a["node"])
+        p = self._placement[(node.name, a.get("chunk", 0))]
+        rows = self._input_rows(node)
+        acc = self._acc_for(node)
+        copy, dup = a.get("copy", 0), p.dup
+        idx = np.arange(copy, rows.shape[0], dup)
+        if idx.size == 0:
+            return
+        w = self.weights[node.name]
+        ro, co = self._chunk_offsets(node, p)
+        wsub = w[ro:ro + p.mapping.r, co:co + p.mapping.c]
+        y = self._cim_mvm(rows[idx][:, ro:ro + p.mapping.r], wsub)
+        acc[np.ix_(idx, np.arange(co, co + wsub.shape[1]))] += y
+
+    def _read_tile(self, a: Dict, wlm: bool) -> None:
+        self.stats.cim_reads += 1
+        node = self.graph.node(a["op"])
+        p = self._placement[(node.name, a.get("chunk", 0))]
+        rows = self._input_rows(node)
+        acc = self._acc_for(node)
+        copy, dup = a.get("copy", 0), p.dup
+        w_idx = a["window"]
+        windows = np.arange(copy, rows.shape[0], dup)
+        if isinstance(w_idx, int):
+            if w_idx >= windows.size:
+                return
+            windows = windows[w_idx:w_idx + 1]
+        rt, ct = a.get("row_tile", 0), a.get("col_tile", 0)
+        r0, r1, c0, c1 = self._tile_ranges(p, rt, ct)
+        ro, co = self._chunk_offsets(node, p)
+        w = self.weights[node.name]
+        wsub = w[ro + r0:ro + min(r1, p.mapping.r),
+                 co + c0:co + min(c1, p.mapping.c)]
+        if wsub.size == 0:
+            return
+        xr0, xr1 = ro + r0, ro + r0 + wsub.shape[0]
+        if wlm and p.row_spread > 1:
+            part = a.get("spread", 0)
+            pr = self.arch.xb.parallel_row
+            n_grp = max(1, math.ceil(wsub.shape[0] / pr))
+            per = math.ceil(n_grp / p.row_spread) * pr
+            s0 = part * per
+            s1 = min(s0 + per, wsub.shape[0])
+            if s0 >= wsub.shape[0]:
+                return
+            wsub = wsub[s0:s1]
+            xr0, xr1 = xr0 + s0, xr0 + (s1 - s0) + s0
+        y = self._cim_mvm(rows[windows][:, xr0:xr1], wsub)
+        cols = np.arange(co + c0, co + c0 + wsub.shape[1])
+        acc[np.ix_(windows, cols)] += y
+
+
+def simulate(graph: Graph, arch: CIMArch, *, level=None, seed: int = 0,
+             params: Optional[CimMvmParams] = None):
+    """Compile ``graph`` for ``arch``, run the reference, interpret the
+    meta-op flow, and return (sim_outputs, ref_outputs, stats)."""
+    from ..core import compiler
+    weights = make_weights(graph, seed)
+    inputs = make_input(graph, seed)
+    p = params or cim_mvm_params(arch)
+
+    def mvm(x_rows, w):
+        # reference shares the crossbar compute semantics (incl. ADC)
+        import jax.numpy as jnp
+        ox = 1 << (p.act_bits - 1)
+        ow = 1 << (p.weight_bits - 1)
+        y_u = np.asarray(kref.cim_mvm_ref(
+            jnp.asarray(x_rows + ox, jnp.int32), jnp.asarray(w + ow, jnp.int32),
+            act_bits=p.act_bits, weight_bits=p.weight_bits,
+            dac_bits=p.dac_bits, cell_bits=p.cell_bits,
+            parallel_row=p.parallel_row, adc_bits=p.adc_bits)).astype(np.int64)
+        sx = (x_rows.astype(np.int64) + ox).sum(-1, keepdims=True)
+        sw = (w.astype(np.int64) + ow).sum(0, keepdims=True)
+        return y_u - ow * sx - ox * sw + x_rows.shape[-1] * ox * ow
+
+    ref_mvm = mvm if not p.exact else None
+    _, shifts = reference_forward(graph, weights, inputs, mvm=ref_mvm)
+    ref_out, _ = reference_forward(graph, weights, inputs, shifts=shifts,
+                                   mvm=ref_mvm)
+    res = compiler.compile_graph(graph, arch, level=level, expand=True)
+    sim = FunctionalSimulator(res.plan, res.program, weights, shifts,
+                              params=p)
+    sim_out = sim.run(inputs)
+    return sim_out, {t: ref_out[t] for t in graph.outputs}, sim.stats

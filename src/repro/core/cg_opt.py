@@ -1,0 +1,478 @@
+"""CG-grained optimization (§3.3.2, Figure 9).
+
+Operates on the computation graph under the chip-tier abstraction:
+
+  * **operator duplication** — a dynamic-programming / dual search for the
+    per-operator duplication count under the ``core_number`` budget
+    (Figure 9(b): "use dynamic programming to search for all operators'
+    duplication numbers under the core_number constraint");
+  * **inter-operator pipeline** — adjacent operators stream tiles;
+  * **dynamic balancing** — duplication numbers adjusted so adjacent
+    stages' compute/data rates match (avoiding pipeline stalls), under
+    ``core_noc_cost`` / ``L0 BW`` / ``ALU`` constraints;
+  * **resource-adaptive graph segmentation** — when CIM capacity cannot
+    hold the whole DNN, maximal subgraphs are constructed iteratively and
+    boundaries refined by popping trailing nodes while latency improves.
+
+The pass attaches its results to ``node.sched`` (the paper annotates the
+ONNX nodes) and returns a ``SchedulePlan`` consumed by the finer-grained
+passes and by the performance simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from .abstraction import CIMArch, ComputingMode
+from .graph import Graph, Node, n_mvm, out_elems, weight_matrix_shape
+from .mapping import BitBinding, VXBMapping, bind, cores_per_copy
+
+
+# ---------------------------------------------------------------------------
+# Placement records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpPlacement:
+    """One CIM operator's (possibly column-tiled chunk's) placement."""
+
+    node: Node
+    chunk: int                   # chunk id when an op is split across segments
+    n_chunks: int
+    mapping: VXBMapping
+    n_mvm: int                   # MVMs (windows) this chunk must execute
+    cores: int                   # cores per copy
+    dup: int = 1                 # duplication count (copies)
+    phases: int = 1              # DAC input-bit phases per activation
+    row_groups: int = 1          # serial parallel-row groups per activation
+    t_load: float = 0.0          # cycles to stream one MVM input
+    alu_epilogue: float = 0.0    # ALU cycles per window (fused successors)
+    # filled by finer passes:
+    vxb_slots: int = 0           # MVM-grained: VXB slots backing this op
+    row_spread: int = 1          # VVM-grained: parallel-row remap factor
+
+    @property
+    def t_mvm(self) -> float:
+        """Cycles per crossbar-set activation after VVM row-spreading."""
+        return self.phases * math.ceil(self.row_groups / self.row_spread)
+
+    @property
+    def t_window(self) -> float:
+        """Steady-state cycles between consecutive windows of one copy."""
+        return max(self.t_mvm, self.t_load, self.alu_epilogue)
+
+    @property
+    def stage_cycles(self) -> float:
+        """Total cycles for this op chunk at its current duplication."""
+        return math.ceil(self.n_mvm / self.dup) * self.t_window
+
+    @property
+    def n_xbs_total(self) -> int:
+        return self.dup * self.mapping.n_xbs
+
+
+@dataclasses.dataclass
+class Segment:
+    placements: List[OpPlacement]
+    rewrite_cycles: float = 0.0  # weight (re)programming before this segment
+
+    @property
+    def cores_used(self) -> int:
+        return sum(p.dup * p.cores for p in self.placements)
+
+
+@dataclasses.dataclass
+class SchedulePlan:
+    graph: Graph
+    arch: CIMArch
+    segments: List[Segment]
+    use_pipeline: bool = True
+    use_duplication: bool = True
+    mvm_pipeline: bool = False   # set by mvm_opt (staggered activation)
+    vvm_remap: bool = False      # set by vvm_opt (row remapping)
+    notes: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def placements(self) -> List[OpPlacement]:
+        return [p for s in self.segments for p in s.placements]
+
+
+# ---------------------------------------------------------------------------
+# Cost model shared by the passes
+# ---------------------------------------------------------------------------
+
+class CostModel:
+    """Analytic per-operator costs under a CIMArch (cycles)."""
+
+    def __init__(self, arch: CIMArch, binding: BitBinding = BitBinding.B_TO_XBC):
+        self.arch = arch
+        self.binding = binding
+
+    def placement(self, node: Node, graph: Graph, chunk: int = 0,
+                  n_chunks: int = 1,
+                  sub_rc: Optional[Tuple[int, int]] = None) -> OpPlacement:
+        r, c = weight_matrix_shape(node)
+        if sub_rc is not None:
+            r, c = sub_rc
+        mapping = bind((r, c), self.arch, self.binding)
+        windows = n_mvm(node, graph.shapes)
+        xb = self.arch.xb
+        phases = xb.input_phases(self.arch.act_bits)
+        if self.arch.mode == ComputingMode.WLM:
+            groups = xb.row_groups(min(r, xb.rows))
+        else:
+            groups = xb.row_groups(xb.rows)
+        in_bits = r * self.arch.act_bits
+        l1 = self.arch.core.l1_bw_bits
+        t_load = in_bits / l1 if math.isfinite(l1) else 0.0
+        return OpPlacement(
+            node=node, chunk=chunk, n_chunks=n_chunks, mapping=mapping,
+            n_mvm=windows, cores=cores_per_copy(self.arch, mapping),
+            phases=phases, row_groups=groups, t_load=t_load,
+            alu_epilogue=self._epilogue(node, graph, windows),
+        )
+
+    def _epilogue(self, node: Node, graph: Graph, windows: int) -> float:
+        """ALU cycles per window for directly-fused successor DCOM ops.
+
+        §3.3.2: "Once the CIM-unsupported node, like Relu, follows the
+        operator, we will also update the duplication number under the
+        constraint of ALU" — we charge the ALU work to the producing CIM
+        stage so duplication past the ALU rate is not rewarded.
+        """
+        alu = self.arch.chip.alu_ops_per_cycle
+        if not math.isfinite(alu):
+            return 0.0
+        cyc = 0.0
+        for succ in graph.successors(node):
+            if not succ.is_cim and succ.op_type not in ("Flatten", "Reshape",
+                                                        "Identity"):
+                cyc += out_elems(succ, graph.shapes) / alu
+        return cyc / max(windows, 1)
+
+    def alu_cycles(self, node: Node, graph: Graph) -> float:
+        """Standalone cost of a CIM-unsupported operator on the chip ALU."""
+        from .graph import macs
+        alu = self.arch.chip.alu_ops_per_cycle
+        if not math.isfinite(alu):
+            return 0.0
+        return macs(node, graph.shapes) / alu
+
+    def weight_xbs(self, node: Node) -> int:
+        return bind(node, self.arch, self.binding).n_xbs
+
+
+# ---------------------------------------------------------------------------
+# Duplication search
+# ---------------------------------------------------------------------------
+
+def _copy_cost(p: OpPlacement, unit: str) -> int:
+    """Resource cost of one copy: whole cores (CM granularity) or
+    crossbar slots (XBM granularity — Eq. (1) packing)."""
+    return p.cores if unit == "cores" else p.mapping.n_xbs
+
+
+def _feasible_bottleneck(placements: List[OpPlacement], budget: int,
+                         target: float, unit: str) -> Optional[List[int]]:
+    """Duplications achieving stage_cycles <= target within the budget."""
+    dups = []
+    total = 0
+    for p in placements:
+        work = p.n_mvm * p.t_window
+        d = max(1, math.ceil(work / max(target, 1e-9)))
+        d = min(d, p.n_mvm)  # no point duplicating past one window per copy
+        if math.ceil(p.n_mvm / d) * p.t_window > target:
+            return None
+        dups.append(d)
+        total += d * _copy_cost(p, unit)
+        if total > budget:
+            return None
+    return dups
+
+
+def balance_duplication(placements: List[OpPlacement], budget: int,
+                        unit: str = "cores") -> None:
+    """Min-bottleneck duplication under the resource budget (pipelined
+    objective).
+
+    Lagrangian-dual binary search over the bottleneck latency T: each op
+    needs ceil(work/T) copies; feasibility is monotone in T, so the search
+    is exact for the bottleneck objective (equivalent to the paper's DP on
+    this objective, but O(n log W)).  Leftover resources then go greedily
+    to the slowest stages (the paper's "intra-segment dynamic balancing").
+    """
+    base = sum(_copy_cost(p, unit) for p in placements)
+    if base > budget:
+        for p in placements:
+            p.dup = 1
+        return
+    lo, hi = 0.0, max(p.n_mvm * p.t_window for p in placements)
+    best = [1] * len(placements)
+    for _ in range(60):
+        mid = (lo + hi) / 2
+        cand = _feasible_bottleneck(placements, budget, mid, unit)
+        if cand is not None:
+            best, hi = cand, mid
+        else:
+            lo = mid
+    for p, d in zip(placements, best):
+        p.dup = d
+    _spend_leftover(placements, budget, unit)
+
+
+def greedy_duplication(placements: List[OpPlacement], budget: int,
+                       unit: str = "cores") -> None:
+    """Min-sum duplication (non-pipelined objective): greedy marginal gain.
+
+    Optimal for the convex per-op cost work/d; this is the 'CG-Duplication'
+    ablation arm and also the Poly-Schedule-style baseline policy.
+    """
+    import heapq
+    for p in placements:
+        p.dup = 1
+    used = sum(_copy_cost(p, unit) for p in placements)
+    if used > budget:
+        return
+
+    def gain(p: OpPlacement) -> float:
+        cur = math.ceil(p.n_mvm / p.dup) * p.t_window
+        nxt = math.ceil(p.n_mvm / (p.dup + 1)) * p.t_window
+        return (cur - nxt) / _copy_cost(p, unit)
+
+    heap = [(-gain(p), i) for i, p in enumerate(placements)]
+    heapq.heapify(heap)
+    while heap:
+        g, i = heapq.heappop(heap)
+        p = placements[i]
+        if -g <= 0 or used + _copy_cost(p, unit) > budget or p.dup >= p.n_mvm:
+            continue
+        p.dup += 1
+        used += _copy_cost(p, unit)
+        heapq.heappush(heap, (-gain(p), i))
+
+
+def _spend_leftover(placements: List[OpPlacement], budget: int,
+                    unit: str) -> None:
+    import heapq
+    used = sum(p.dup * _copy_cost(p, unit) for p in placements)
+    heap = [(-p.stage_cycles, i) for i, p in enumerate(placements)]
+    heapq.heapify(heap)
+    guard = 0
+    while heap and guard < 100000:
+        guard += 1
+        neg, i = heapq.heappop(heap)
+        p = placements[i]
+        if p.dup >= p.n_mvm or used + _copy_cost(p, unit) > budget:
+            continue
+        p.dup += 1
+        used += _copy_cost(p, unit)
+        heapq.heappush(heap, (-p.stage_cycles, i))
+        if all(used + _copy_cost(q, unit) > budget or q.dup >= q.n_mvm
+               for q in placements):
+            break
+
+
+# ---------------------------------------------------------------------------
+# Segment latency estimate (used during segmentation search)
+# ---------------------------------------------------------------------------
+
+def estimate_segment_cycles(placements: List[OpPlacement],
+                            use_pipeline: bool) -> float:
+    if not placements:
+        return 0.0
+    if use_pipeline:
+        fill = sum(p.t_window for p in placements)
+        return fill + max(p.stage_cycles for p in placements)
+    return sum(p.stage_cycles for p in placements)
+
+
+# ---------------------------------------------------------------------------
+# The CG pass
+# ---------------------------------------------------------------------------
+
+def run(graph: Graph, arch: CIMArch, *, use_pipeline: bool = True,
+        use_duplication: bool = True,
+        binding: BitBinding = BitBinding.B_TO_XBC,
+        ping_pong: bool = False,
+        naive_chunking: bool = False) -> SchedulePlan:
+    """CG-grained pass.
+
+    ``ping_pong=True`` schedules segments onto half the core pool so the
+    other half can be (re)programmed concurrently — weight-rewrite
+    latency hides behind compute (double buffering).  The compiler tries
+    both variants for multi-segment schedules and keeps the faster
+    (compiler.compile_graph); on weight-frozen single-segment ReRAM
+    deployments it is never chosen.
+    """
+    if not arch.mode.allows(ComputingMode.CM):
+        raise ValueError("architecture exposes no core-level interface")
+    cm = CostModel(arch, binding)
+    budget = arch.chip.n_cores
+    if ping_pong:
+        budget = max(1, budget // 2)
+
+    # 1. placements for every CIM node; ops whose single copy exceeds the
+    # whole chip are tiled into (row x col) chunks that each fit.  Row
+    # chunks produce partial sums accumulated by the chip ALU; column
+    # chunks produce disjoint output slices.
+    pls: List[OpPlacement] = []
+    for node in graph.cim_nodes:
+        p0 = cm.placement(node, graph)
+        if p0.cores <= budget:
+            pls.append(p0)
+            continue
+        r, c = weight_matrix_shape(node)
+        xb = arch.xb
+        slot_cap = budget * arch.core.n_xbs      # crossbars on the chip
+        full = bind((r, c), arch, binding)
+        grid_r_full, grid_c_full = full.grid_r, full.grid_c
+        # search the (row-chunks x col-chunks) grid minimizing the total
+        # chunk count (serial reload generations), subject to one chunk
+        # fitting the chip; ties prefer bigger chunks (better packing)
+        best = None
+        rc_lo = max(1, math.ceil(grid_r_full / slot_cap))
+        rc_hi = rc_lo if naive_chunking else grid_r_full
+        for rc in range(rc_lo, rc_hi + 1):
+            grid_r_chunk = math.ceil(grid_r_full / rc)
+            col_cap = slot_cap // grid_r_chunk
+            if col_cap < 1:
+                continue
+            grid_c_chunk = min(col_cap, grid_c_full)
+            cc = math.ceil(grid_c_full / grid_c_chunk)
+            cores = math.ceil(grid_r_chunk * grid_c_chunk / arch.core.n_xbs)
+            if cores > budget:
+                continue
+            key = (rc * cc, -grid_r_chunk * grid_c_chunk)
+            if best is None or key < best[0]:
+                best = (key, rc, cc)
+            if grid_r_chunk == 1:
+                break   # further row splits cannot reduce the chunk count
+        assert best is not None, f"no feasible chunking for {node.name}"
+        _, rc, cc = best
+        sub_r = math.ceil(r / rc)
+        sub_c = math.ceil(c / cc)
+        n_chunks = rc * cc
+        for ch in range(n_chunks):
+            pls.append(cm.placement(node, graph, chunk=ch, n_chunks=n_chunks,
+                                    sub_rc=(sub_r, sub_c)))
+        # safety: the construction above guarantees fit, but guard anyway
+        assert pls[-1].cores <= budget, (
+            f"chunking failed for {node.name}: {pls[-1].cores} > {budget}")
+
+    # 2. resource-adaptive segmentation + per-segment duplication
+    segments = segment_graph(pls, arch, budget, use_pipeline, use_duplication)
+
+    # 3. annotate nodes (paper: attributes on the ONNX graph)
+    for si, seg in enumerate(segments):
+        for p in seg.placements:
+            p.node.sched.update({
+                "segment": si, "dup": p.dup, "cores_per_copy": p.cores,
+                "n_vxb": p.mapping.n_xbs,
+            })
+
+    plan = SchedulePlan(graph=graph, arch=arch, segments=segments,
+                        use_pipeline=use_pipeline,
+                        use_duplication=use_duplication)
+    plan.notes["cg_budget"] = budget
+    plan.notes["ping_pong"] = ping_pong
+    return plan
+
+
+def _rewrite_cycles(seg_pls: List[OpPlacement], arch: CIMArch) -> float:
+    """Per-inference cycles to (re)program a segment's crossbars.
+
+    Cores program their crossbars in parallel; rows within a crossbar are
+    written serially at the memory cell's write cost (§2.1's device
+    diversity — ReRAM/FLASH writes are ~100-1000x an SRAM write)."""
+    n_xbs = sum(p.dup * p.mapping.n_xbs for p in seg_pls)
+    return n_xbs * arch.t_write_xb() / max(arch.chip.n_cores, 1)
+
+
+def _duplicate_segment(seg_pls: List[OpPlacement], arch: CIMArch,
+                       budget: int, use_pipeline: bool, use_duplication: bool,
+                       charge_rewrite: bool) -> float:
+    """Assign duplications for one segment; returns estimated cycles.
+
+    When the segment must be reprogrammed per inference (multi-segment
+    schedules), duplication inflates the rewrite cost, so the budget
+    actually spent on duplication is searched (the paper's
+    resource-*adaptive* allocation): fractions of the core budget are
+    tried and the best rewrite+compute total wins.  On SRAM chips writes
+    are cheap and the full budget survives the search.
+    """
+    def apply(frac: float) -> float:
+        for p in seg_pls:
+            p.dup = 1
+        if use_duplication and frac > 0:
+            b = max(sum(p.cores for p in seg_pls), int(budget * frac))
+            if use_pipeline:
+                balance_duplication(seg_pls, b)
+            else:
+                greedy_duplication(seg_pls, b)
+        cost = estimate_segment_cycles(seg_pls, use_pipeline)
+        if charge_rewrite:
+            cost += _rewrite_cycles(seg_pls, arch)
+        return cost
+
+    if not use_duplication:
+        return apply(0.0)
+    if not charge_rewrite:
+        return apply(1.0)
+    best_cost, best_frac = None, 1.0
+    for frac in (1.0, 0.5, 0.25, 0.125, 0.0625, 0.0):
+        cost = apply(frac)
+        if best_cost is None or cost < best_cost - 1e-9:
+            best_cost, best_frac = cost, frac
+    return apply(best_frac)
+
+
+def segment_graph(pls: List[OpPlacement], arch: CIMArch, budget: int,
+                  use_pipeline: bool, use_duplication: bool,
+                  pop_window: int = 4) -> List[Segment]:
+    """Figure 9(b)'s resource-adaptive segmentation.
+
+    Grow a maximal prefix that fits (one copy per op), then refine the
+    boundary: pop trailing nodes while the estimated latency of the
+    segment (after duplication DP) improves.  Weight-rewrite cost between
+    segments is charged per the memory-cell write cost — this is where
+    ReRAM's expensive writes penalize segmentation (§1, §2.1).
+    """
+    # Does the whole model fit at one copy per op?  If so, weights are
+    # programmed once and amortized over the inference stream (ReRAM
+    # weight-frozen operation); otherwise EVERY segment is reprogrammed
+    # on every inference (segment N+1 overwrites segment N's crossbars).
+    multi_segment = sum(p.cores for p in pls) > budget
+    segments: List[Segment] = []
+    i = 0
+    while i < len(pls):
+        j = i
+        used = 0
+        while j < len(pls) and used + pls[j].cores <= budget:
+            used += pls[j].cores
+            j += 1
+        j = max(j, i + 1)  # always make progress
+
+        # boundary refinement: try popping up to pop_window trailing nodes
+        best_j, best_cost = j, None
+        if j < len(pls):  # popping only matters when a tail remains
+            for jj in range(j, max(i + 1, j - pop_window) - 1, -1):
+                seg_pls = pls[i:jj]
+                cost = _duplicate_segment(seg_pls, arch, budget, use_pipeline,
+                                          use_duplication, multi_segment)
+                # remaining nodes at 1 copy + their rewrite as tail estimate
+                tail = sum(p.n_mvm * p.t_window for p in pls[jj:])
+                if multi_segment:
+                    tail += _rewrite_cycles(pls[jj:], arch)
+                cost += tail
+                if best_cost is None or cost < best_cost - 1e-9:
+                    best_cost, best_j = cost, jj
+        j = best_j
+
+        seg_pls = pls[i:j]
+        _duplicate_segment(seg_pls, arch, budget, use_pipeline,
+                           use_duplication, multi_segment)
+        rewrite = _rewrite_cycles(seg_pls, arch) if multi_segment else 0.0
+        segments.append(Segment(placements=seg_pls, rewrite_cycles=rewrite))
+        i = j
+    return segments

@@ -1,0 +1,84 @@
+"""Multi-level scheduling driver (§3.3.1, Figure 3).
+
+The computing mode exposed by the target chip selects the pass stack:
+
+    CM  chip:  CG-grained only
+    XBM chip:  CG-grained -> MVM-grained
+    WLM chip:  CG-grained -> MVM-grained -> VVM-grained
+
+Finer passes inherit the coarser results (the paper's "multi-level joint
+scheduling").  ``level`` may be clamped below the chip's mode for the
+ablation arms of §4.3 (e.g. evaluate CG-only on a WLM-capable chip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from . import cg_opt, codegen, mvm_opt, vvm_opt
+from .abstraction import CIMArch, ComputingMode
+from .cg_opt import SchedulePlan
+from .graph import Graph
+from .mapping import BitBinding
+from .mop import Program
+
+
+@dataclasses.dataclass
+class CompileResult:
+    plan: SchedulePlan
+    program: Program
+
+    @property
+    def text(self) -> str:
+        return self.program.to_text()
+
+    def report(self) -> dict:
+        from ..cimsim import perf
+        return dataclasses.asdict(perf.estimate(self.plan))
+
+
+def compile_graph(
+    graph: Graph,
+    arch: CIMArch,
+    *,
+    level: Optional[Union[str, ComputingMode]] = None,
+    use_pipeline: bool = True,
+    use_duplication: bool = True,
+    binding: BitBinding = BitBinding.B_TO_XBC,
+    expand: bool = False,
+) -> CompileResult:
+    """Compile ``graph`` for ``arch`` and emit the meta-operator flow."""
+    if isinstance(level, str):
+        level = ComputingMode(level)
+    level = level or arch.mode
+    if not arch.mode.allows(level):
+        raise ValueError(
+            f"chip {arch.name} (mode {arch.mode.value}) does not expose the "
+            f"{level.value} interface")
+
+    def build(ping_pong: bool) -> SchedulePlan:
+        plan = cg_opt.run(graph, arch, use_pipeline=use_pipeline,
+                          use_duplication=use_duplication, binding=binding,
+                          ping_pong=ping_pong)
+        plan.notes["level"] = level
+        if level.allows(ComputingMode.XBM):
+            mvm_opt.run(plan)
+        if level.allows(ComputingMode.WLM):
+            vvm_opt.run(plan)
+        return plan
+
+    plan = build(ping_pong=False)
+    if len(plan.segments) > 1:
+        # weight reloads are on the critical path: consider double-buffered
+        # (ping-pong) scheduling that hides rewrites behind compute at the
+        # price of half the compute pool per segment.
+        from ..cimsim import perf
+        alt = build(ping_pong=True)
+        if perf.estimate(alt).latency_cycles < perf.estimate(plan).latency_cycles:
+            plan = alt
+        else:  # rebuild to restore node.sched annotations of the winner
+            plan = build(ping_pong=False)
+
+    program = codegen.emit(plan, expand=expand)
+    program.validate()
+    return CompileResult(plan=plan, program=program)

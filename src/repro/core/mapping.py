@@ -1,0 +1,118 @@
+"""VXB (Virtual Crossbar) construction and dimension binding (§3.3.3, Fig. 7).
+
+A *VXB* is the set of physical crossbars that collaborate to perform a
+single MVM: the logical weight matrix (R rows x C cols x B weight bits)
+is bound onto the physical crossbar grid.  The paper's dimension-binding
+scheme offers two placements for the bit dimension:
+
+  * ``B -> XBC`` (default): weight bits spread to *adjacent columns* of the
+    same crossbar, so a logical column consumes ``ceil(B/cell_precision)``
+    physical columns.
+  * ``B -> XB``: bit slices live on *different crossbars*, each crossbar
+    holding one slice of the full R x C matrix.
+
+R always binds to XBR (wordlines) and C to XBC (bitlines).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import List, Tuple
+
+from .abstraction import CIMArch
+from .graph import Node, weight_matrix_shape
+
+
+class BitBinding(enum.Enum):
+    B_TO_XBC = "B->XBC"     # bits to adjacent columns (Figure 7 default)
+    B_TO_XB = "B->XB"       # bits to separate crossbars
+
+
+@dataclasses.dataclass(frozen=True)
+class VXBMapping:
+    """How one operator copy's weight matrix occupies physical crossbars."""
+
+    r: int                      # logical rows of weight matrix
+    c: int                      # logical cols
+    binding: BitBinding
+    col_slices: int             # physical columns per logical weight
+    grid_r: int                 # crossbars stacked along R
+    grid_c: int                 # crossbars stacked along C (incl. bit slices)
+    rows_used_last: int         # wordlines used in the last row-tile
+    cols_used_last: int         # bitlines used in the last col-tile
+
+    @property
+    def n_xbs(self) -> int:
+        """Physical crossbars holding one full copy of the weight matrix."""
+        return self.grid_r * self.grid_c
+
+    @property
+    def xbs_per_vxb(self) -> int:
+        """Crossbars composing one VXB (the unit computing one sub-MVM tile
+        at full weight precision).  With ``B->XBC`` the bit slices share a
+        crossbar, so a VXB is a single crossbar; with ``B->XB`` one VXB
+        spans ``col_slices`` crossbars."""
+        return self.col_slices if self.binding is BitBinding.B_TO_XB else 1
+
+    @property
+    def n_vxb(self) -> int:
+        """VXB tiles needed to cover the whole weight matrix (``num_VXB``
+        of Eq. 1)."""
+        return self.n_xbs // self.xbs_per_vxb
+
+
+def bind(node_or_rc, arch: CIMArch,
+         binding: BitBinding = BitBinding.B_TO_XBC) -> VXBMapping:
+    """Bind a weight matrix to the crossbar grid of ``arch``."""
+    if isinstance(node_or_rc, Node):
+        r, c = weight_matrix_shape(node_or_rc)
+    else:
+        r, c = node_or_rc
+    slices = math.ceil(arch.weight_bits / arch.xb.cell_precision)
+    xr, xc = arch.xb.rows, arch.xb.cols
+
+    grid_r = math.ceil(r / xr)
+    if binding is BitBinding.B_TO_XBC:
+        # a logical column's bit slices live in adjacent physical columns
+        # of the same crossbar (never straddling two crossbars), so each
+        # crossbar holds floor(cols / slices) logical columns
+        if xc < slices:
+            raise ValueError(
+                f"crossbar has {xc} columns < {slices} bit slices; "
+                "use BitBinding.B_TO_XB for this cell precision")
+        cols_per_xb = xc // slices
+        grid_c = math.ceil(c / cols_per_xb)
+        cols_last = (c - (grid_c - 1) * cols_per_xb) * slices
+    else:
+        per_slice_grid_c = math.ceil(c / xc)
+        grid_c = per_slice_grid_c * slices
+        cols_last = c - (per_slice_grid_c - 1) * xc
+
+    rows_last = r - (grid_r - 1) * xr
+    return VXBMapping(r=r, c=c, binding=binding, col_slices=slices,
+                      grid_r=grid_r, grid_c=grid_c,
+                      rows_used_last=rows_last, cols_used_last=cols_last)
+
+
+def vxbs_per_core(arch: CIMArch, mapping: VXBMapping) -> int:
+    """``Core_VXB`` of Eq. (1): VXBs that fit in one core."""
+    return arch.core.n_xbs // mapping.xbs_per_vxb
+
+
+def cores_per_copy(arch: CIMArch, mapping: VXBMapping) -> int:
+    """Cores one operator copy occupies (CG-grained granularity)."""
+    return max(1, math.ceil(mapping.n_xbs / arch.core.n_xbs))
+
+
+def row_tile_rows(mapping: VXBMapping, arch: CIMArch) -> List[int]:
+    """Wordlines used by each row tile of the VXB."""
+    full = arch.xb.rows
+    return [full] * (mapping.grid_r - 1) + [mapping.rows_used_last]
+
+
+def logical_cols_per_xb(mapping: VXBMapping, arch: CIMArch) -> int:
+    """Logical (full-precision) weight columns held by one crossbar."""
+    if mapping.binding is BitBinding.B_TO_XBC:
+        return max(1, arch.xb.cols // mapping.col_slices)
+    return arch.xb.cols

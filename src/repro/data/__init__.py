@@ -1,0 +1,1 @@
+from .pipeline import TokenStream, FileCorpus, make_batch_iterator  # noqa

@@ -1,0 +1,1 @@
+from .ops import cim_mvm, cim_mvm_params, CimMvmParams  # noqa: F401

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the bit-sliced CIM crossbar MVM.
+
+Hardware adaptation (see DESIGN.md §3): the analog crossbar's compute
+semantics — bit-serial DAC phases x cell-precision weight slices x
+per-``parallel_row``-group ADC saturation x digital shift-accumulate —
+map exactly onto integer MXU matmuls over bit-planes.  The tiling is
+TPU-native rather than a port of the analog array:
+
+  * grid = (M tiles, C tiles, row-block tiles); the row-block axis is the
+    innermost grid dim so partial sums accumulate into the same VMEM out
+    block (classic matmul revisiting pattern);
+  * bit planes are laid out as leading non-tiled axes, pre-transposed by
+    ops.py so the kernel body is pure batched ``dot_general`` — no
+    in-kernel reshapes/transposes (TPU layouts stay trivial);
+  * row groups become the batch dim of an int8 x int8 -> int32 MXU batch
+    matmul; the ADC clamp is a VPU ``minimum`` between accumulations;
+  * block sizes keep the lane dim at 128 and the working set in VMEM
+    (see ops.py block-size policy).
+
+Validated bit-exactly against ref.cim_mvm_ref (interpret mode on CPU;
+the same pallas_call lowers for TPU targets).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xpg_ref, wsg_ref, out_ref, *, dac_bits: int, cell_bits: int,
+            adc_max: int, n_phases: int, n_slices: int):
+    """One (bm x bc) output block, one row-block of gb groups.
+
+    xpg_ref: (P, gb, bm, pr)   input bit-planes, grouped rows
+    wsg_ref: (S, gb, pr, bc)   weight bit-slices, grouped rows
+    out_ref: (bm, bc) int32    accumulated across the row-block grid dim
+    """
+    k = pl.program_id(2)
+    acc = jnp.zeros(out_ref.shape, jnp.int32)
+    for p in range(n_phases):
+        xg = xpg_ref[p]                       # (gb, bm, pr)
+        for s in range(n_slices):
+            wg = wsg_ref[s]                   # (gb, pr, bc)
+            # analog column sum of one activation: batched over groups
+            part = jax.lax.dot_general(
+                xg, wg,
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.int32)        # (gb, bm, bc)
+            # ADC saturation happens per analog read (per group)
+            part = jnp.minimum(part, adc_max)
+            shift = p * dac_bits + s * cell_bits
+            acc = acc + (part.sum(axis=0) << shift)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _accum():
+        out_ref[...] = out_ref[...] + acc
+
+
+def cim_mvm_pallas(xpg: jnp.ndarray, wsg: jnp.ndarray, *, dac_bits: int,
+                   cell_bits: int, adc_bits: int, block_m: int,
+                   block_c: int, groups_per_block: int,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Launch the kernel.
+
+    xpg: (P, G, M, pr)  — phases x row-groups x rows-of-x x parallel_row
+    wsg: (S, G, pr, C)  — slices x row-groups x parallel_row x cols
+    returns (M, C) int32.
+    Shapes must already be padded to the block grid (ops.py does this).
+    """
+    P, G, M, pr = xpg.shape
+    S, G2, pr2, C = wsg.shape
+    assert (G, pr) == (G2, pr2), (xpg.shape, wsg.shape)
+    assert M % block_m == 0 and C % block_c == 0 and G % groups_per_block == 0
+
+    grid = (M // block_m, C // block_c, G // groups_per_block)
+    kernel = functools.partial(
+        _kernel, dac_bits=dac_bits, cell_bits=cell_bits,
+        adc_max=(1 << adc_bits) - 1, n_phases=P, n_slices=S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((P, groups_per_block, block_m, pr),
+                         lambda i, j, k: (0, k, i, 0)),
+            pl.BlockSpec((S, groups_per_block, pr, block_c),
+                         lambda i, j, k: (0, k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_c), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, C), jnp.int32),
+        interpret=interpret,
+    )(xpg, wsg)

@@ -1,0 +1,149 @@
+"""jit'd public wrapper around the CIM-MVM kernel.
+
+``cim_mvm``      — unsigned bit-sliced crossbar MVM (kernel or oracle).
+``cim_mvm_signed`` — signed ints via offset encoding (the standard CIM
+                     trick: store w + 2^(wb-1), subtract the rank-1
+                     correction digitally).
+``cim_mvm_params`` — derive the precision/row parameters from a CIMArch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import cim_mvm_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class CimMvmParams:
+    act_bits: int = 8
+    weight_bits: int = 8
+    dac_bits: int = 1
+    cell_bits: int = 2
+    parallel_row: int = 8
+    adc_bits: int = 8
+
+    @property
+    def exact(self) -> bool:
+        """True if the ADC never saturates (pure integer matmul)."""
+        need = ref.exact_adc_bits(self.act_bits, self.weight_bits,
+                                  self.dac_bits, self.cell_bits,
+                                  self.parallel_row)
+        return self.adc_bits >= need
+
+
+def cim_mvm_params(arch, rows_used: Optional[int] = None) -> CimMvmParams:
+    """Build params from a core.abstraction.CIMArch."""
+    xb = arch.xb
+    pr = xb.parallel_row
+    if rows_used is not None:
+        pr = min(pr, rows_used)
+    return CimMvmParams(act_bits=arch.act_bits, weight_bits=arch.weight_bits,
+                        dac_bits=xb.dac_bits, cell_bits=xb.cell_precision,
+                        parallel_row=pr, adc_bits=xb.adc_bits)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block_policy(m: int, c: int, r_groups: int, pr: int):
+    """Pick (block_m, block_c, groups_per_block) with the lane dim at 128
+    and the VMEM working set bounded (~2 MiB of int8 planes)."""
+    block_m = 128 if m >= 128 else max(8, 1 << (m - 1).bit_length())
+    block_c = 128 if c >= 128 else max(128, c)   # pad small C up to a lane
+    gb = max(1, min(r_groups, max(1, 512 // max(pr, 1))))
+    while r_groups % gb:
+        gb -= 1
+    return block_m, block_c, gb
+
+
+@functools.partial(jax.jit, static_argnames=("params", "use_kernel",
+                                             "interpret"))
+def cim_mvm(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
+            use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """Unsigned crossbar MVM: (M,R) x (R,C) -> (M,C) int32.
+
+    ``interpret=True`` (default) runs the Pallas kernel body in interpret
+    mode — the CPU-validation path; on TPU pass interpret=False.
+    ``use_kernel=False`` selects the pure-jnp oracle.
+    """
+    if x_u.ndim == 1:
+        return cim_mvm(x_u[None], w_u, params, use_kernel, interpret)[0]
+    if not use_kernel:
+        return ref.cim_mvm_ref(
+            x_u, w_u, act_bits=params.act_bits,
+            weight_bits=params.weight_bits, dac_bits=params.dac_bits,
+            cell_bits=params.cell_bits, parallel_row=params.parallel_row,
+            adc_bits=params.adc_bits)
+
+    m, r = x_u.shape
+    _, c = w_u.shape
+    pr = min(params.parallel_row, r)
+    n_groups = math.ceil(r / pr)
+
+    # pad rows to a whole number of parallel-row groups
+    x_u = _pad_to(x_u.astype(jnp.int32), 1, pr)
+    w_u = _pad_to(w_u.astype(jnp.int32), 0, pr)
+
+    xp = ref.bit_planes(x_u, params.act_bits, params.dac_bits)   # (P,M,R')
+    ws = ref.bit_planes(w_u, params.weight_bits, params.cell_bits)  # (S,R',C)
+    P, S = xp.shape[0], ws.shape[0]
+
+    # int8 planes when they fit (MXU-native); int32 otherwise
+    plane_dtype = jnp.int8 if max(params.dac_bits, params.cell_bits) <= 7 \
+        else jnp.int32
+
+    block_m, block_c, gb = _block_policy(m, c, n_groups, pr)
+    # grouped layouts: (P,G,M,pr) and (S,G,pr,C), padded to the grid
+    xpg = xp.reshape(P, -1, n_groups, pr).transpose(0, 2, 1, 3)
+    wsg = ws.reshape(S, n_groups, pr, -1)
+    xpg = _pad_to(xpg, 2, block_m).astype(plane_dtype)
+    wsg = _pad_to(wsg, 3, block_c).astype(plane_dtype)
+    # gb was chosen to divide n_groups (_block_policy), no group padding
+
+    out = cim_mvm_pallas(xpg, wsg, dac_bits=params.dac_bits,
+                         cell_bits=params.cell_bits,
+                         adc_bits=params.adc_bits, block_m=block_m,
+                         block_c=block_c, groups_per_block=gb,
+                         interpret=interpret)
+    return out[:m, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("params", "use_kernel",
+                                             "interpret"))
+def cim_mvm_signed(x_i: jnp.ndarray, w_i: jnp.ndarray, params: CimMvmParams,
+                   use_kernel: bool = True,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Signed MVM via offset encoding.
+
+    x in [-2^(ab-1), 2^(ab-1)), w likewise; stored as x+ox / w+ow
+    unsigned; the rank-1 offset correction is applied digitally (exact
+    when the ADC does not saturate — chips budget the ADC for the
+    offset-encoded range, and so do our params presets).
+    """
+    squeeze = x_i.ndim == 1
+    if squeeze:
+        x_i = x_i[None]
+    ox = 1 << (params.act_bits - 1)
+    ow = 1 << (params.weight_bits - 1)
+    x_u = (x_i.astype(jnp.int32) + ox)
+    w_u = (w_i.astype(jnp.int32) + ow)
+    y_u = cim_mvm(x_u, w_u, params, use_kernel, interpret)
+    r = x_i.shape[-1]
+    sx = x_u.sum(axis=-1, keepdims=True)          # (M,1)
+    sw = w_u.sum(axis=0, keepdims=True)           # (1,C)
+    y = y_u - ow * sx - ox * sw + r * ox * ow
+    return y[0] if squeeze else y

@@ -1,0 +1,84 @@
+"""Pure-jnp oracle for the bit-sliced CIM crossbar MVM.
+
+Models the analog compute semantics of a CIM crossbar array exactly
+(§3.2.3): the input vector is presented bit-serially (``dac_bits`` per
+phase), weights are stored as ``cell_bits`` slices in adjacent columns,
+at most ``parallel_row`` wordlines are activated per analog read, the
+column current is digitized by an ``adc_bits`` ADC (saturating), and the
+digital shift-accumulate combines phases / slices / row groups:
+
+    y[m,c] = sum_g sum_p sum_s 2^(p*db + s*cb) *
+             ADC( sum_{r in group g} x_p[m,r] * w_s[r,c] )
+
+With an ADC wide enough for the analog dynamic range the computation is
+exactly the integer matmul x @ w; a narrow ADC saturates (clips) — both
+behaviors are part of the contract and are swept in tests.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def bit_planes(x: jnp.ndarray, total_bits: int, plane_bits: int) -> jnp.ndarray:
+    """Decompose unsigned ints into ceil(total/plane) planes (LSB first).
+
+    Returns (n_planes, *x.shape) int32 with each plane < 2**plane_bits.
+    """
+    n = math.ceil(total_bits / plane_bits)
+    x = x.astype(jnp.int32)
+    planes = []
+    mask = (1 << plane_bits) - 1
+    for i in range(n):
+        planes.append((x >> (i * plane_bits)) & mask)
+    return jnp.stack(planes)
+
+
+def adc_saturate(v: jnp.ndarray, adc_bits: int) -> jnp.ndarray:
+    return jnp.minimum(v, (1 << adc_bits) - 1)
+
+
+def cim_mvm_ref(x_u: jnp.ndarray, w_u: jnp.ndarray, *, act_bits: int,
+                weight_bits: int, dac_bits: int, cell_bits: int,
+                parallel_row: int, adc_bits: int) -> jnp.ndarray:
+    """Oracle: (M,R) uint x  @  (R,C) uint w  ->  (M,C) int32.
+
+    All the physics happens here; the Pallas kernel must match this
+    bit-exactly for every shape/precision combination.
+    """
+    m, r = x_u.shape
+    r2, c = w_u.shape
+    assert r == r2, (x_u.shape, w_u.shape)
+    pr = min(parallel_row, r)
+    n_groups = math.ceil(r / pr)
+    pad_r = n_groups * pr - r
+    if pad_r:
+        x_u = jnp.pad(x_u, ((0, 0), (0, pad_r)))
+        w_u = jnp.pad(w_u, ((0, pad_r), (0, 0)))
+
+    xp = bit_planes(x_u, act_bits, dac_bits)          # (P, M, R)
+    ws = bit_planes(w_u, weight_bits, cell_bits)      # (S, R, C)
+    P, S = xp.shape[0], ws.shape[0]
+
+    xg = xp.reshape(P, m, n_groups, pr)               # (P, M, G, pr)
+    wg = ws.reshape(S, n_groups, pr, c)               # (S, G, pr, C)
+
+    out = jnp.zeros((m, c), jnp.int32)
+    for p in range(P):
+        for s in range(S):
+            # per-group analog dot + ADC, then digital accumulate
+            part = jnp.einsum("mgr,grc->gmc", xg[p], wg[s],
+                              preferred_element_type=jnp.int32)
+            part = adc_saturate(part, adc_bits)
+            out = out + (part.sum(axis=0) << (p * dac_bits + s * cell_bits))
+    return out
+
+
+def exact_adc_bits(act_bits: int, weight_bits: int, dac_bits: int,
+                   cell_bits: int, parallel_row: int) -> int:
+    """Smallest ADC width that never saturates (exact integer matmul)."""
+    vmax = parallel_row * ((1 << dac_bits) - 1) * ((1 << cell_bits) - 1)
+    return max(1, math.ceil(math.log2(vmax + 1)))

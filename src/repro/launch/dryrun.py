@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (deliverable e).
+
+``.lower().compile()`` every (architecture x input shape) cell on the
+production meshes — 16x16 single-pod and 2x16x16 multi-pod — and record
+memory_analysis / cost_analysis / collective bytes for the roofline.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init), which is why it precedes the docstring's
+siblings.  Do not set that flag globally: smoke tests and benches run on
+the single real CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells x 2 meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCHS, get_config
+from ..configs.base import SHAPES, shapes_for
+from .mesh import make_production_mesh
+from .steps import build_cell
+from ..analysis import roofline
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_chips": int(n_chips), "status": "ok",
+           "variant": "optimized" if optimized else "baseline"}
+    perf_opts = None
+    if optimized:
+        from ..models.perfopts import OPTIMIZED
+        perf_opts = OPTIMIZED
+    t0 = time.time()
+    try:
+        with mesh:
+            cell = build_cell(cfg, shape, mesh, perf=perf_opts)
+            lowered = cell.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            if verbose:
+                print(f"  memory_analysis: {ma}")
+                print(f"  cost_analysis: flops={ca.get('flops')} "
+                      f"bytes={ca.get('bytes accessed')}")
+            coll = roofline.parse_collectives(compiled.as_text(),
+                                              n_partitions=n_chips)
+            rec.update(
+                lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+                flops=float(ca.get("flops", 0.0)),
+                bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                walked_flops=coll["walked_flops"],
+                walked_hbm_bytes=coll["walked_hbm_bytes"],
+                temp_bytes=int(ma.temp_size_in_bytes),
+                arg_bytes=int(ma.argument_size_in_bytes),
+                out_bytes=int(ma.output_size_in_bytes),
+                collective_bytes=coll["total_bytes"],
+                collective_count=coll["count"],
+                collectives=coll["by_kind"],
+            )
+            rec.update(roofline.terms(rec, cfg, shape, n_chips))
+    except Exception as e:  # a failing cell is a bug — record and surface
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch x shape) cell")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable the optimized PerfOpts set (§Perf)")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for shape in shapes_for(cfg):
+                cells.append((arch, shape.name))
+    else:
+        if not args.arch:
+            ap.error("--arch required unless --all")
+        cfg = get_config(args.arch)
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else shapes_for(cfg))
+        cells = [(args.arch, s.name) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    records = []
+    if out_path.exists():
+        records = json.loads(out_path.read_text())
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records
+            if r.get("status") == "ok"}
+
+    n_fail = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            if (arch, shape, mesh_name) in done:
+                print(f"[skip] {arch} x {shape} on {mesh_name} (cached)")
+                continue
+            print(f"[dryrun] {arch} x {shape} on {mesh_name} ...", flush=True)
+            rec = run_cell(arch, shape, multi, optimized=args.opt)
+            records = [r for r in records
+                       if not (r["arch"] == arch and r["shape"] == shape
+                               and r["mesh"] == mesh_name)]
+            records.append(rec)
+            out_path.write_text(json.dumps(records, indent=1))
+            status = rec["status"]
+            if status != "ok":
+                n_fail += 1
+                print(f"  FAIL: {rec['error']}")
+            else:
+                print(f"  ok in {rec['total_s']}s  "
+                      f"flops={rec['flops']:.3g} "
+                      f"coll={rec['collective_bytes']:.3g}B "
+                      f"temp={rec['temp_bytes']/2**30:.2f}GiB/device")
+    print(f"\n{len(records)} records in {out_path}; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Logical-axis sharding rules (MaxText-style), with divisibility
+fallback so odd dimensions (vocab 50280, 25 SSM heads, batch 1) degrade
+to replication instead of erroring.
+
+Train:   FSDP x TP — reduction dims shard on "data", model dims on
+         "model"; batch on ("pod","data"); optimizer state follows
+         params (ZeRO-3-like memory).
+Serve:   params shard on "model" only (fit in HBM without FSDP
+         gathers); batch on ("pod","data"); KV-cache sequence on
+         "model" (distributed flash-decoding softmax via SPMD partial
+         reductions).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_rules(cfg: ModelConfig, mesh: Mesh, kind: str) -> Rules:
+    """logical axis name -> mesh axes (or None = replicate)."""
+    model_size = mesh.shape["model"]
+    # experts: expert-parallel when the expert count fills the axis,
+    # otherwise tensor-parallel inside each expert
+    if cfg.n_experts and cfg.n_experts % model_size == 0:
+        expert, mlp_e = ("model",), None
+    else:
+        expert, mlp_e = None, ("model",)
+    rules: Rules = {
+        "vocab": ("model",),
+        "embed": ("data",) if kind == "train" else None,
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "inner": ("model",),
+        "expert": expert,
+        "mlp_e": mlp_e,
+        "layers": None,
+        None: None,
+    }
+    return rules
+
+
+def cache_rules(cfg: ModelConfig, mesh: Mesh, kind: str) -> Rules:
+    return {
+        "batch": _batch_axes(mesh),
+        "kvseq": ("model",),
+        "ssm_heads": ("model",),
+        "layers": None,
+        None: None,
+    }
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh, rules: Rules) -> P:
+    """Build a PartitionSpec, dropping assignments that don't divide."""
+    assert len(shape) == len(axes), (shape, axes)
+    used = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        mesh_axes = rules.get(ax)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        total = math.prod(mesh.shape[a] for a in mesh_axes) if mesh_axes else 1
+        if not mesh_axes or dim % total != 0:
+            parts.append(None)
+            continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(specs_tree: Any, axes_tree: Any, mesh: Mesh,
+                   rules: Rules) -> Any:
+    """NamedSharding tree matching a ShapeDtypeStruct tree."""
+    def build(spec, axes):
+        return NamedSharding(mesh, spec_for(tuple(spec.shape), tuple(axes),
+                                            mesh, rules))
+    return jax.tree.map(build, specs_tree, axes_tree)
+
+
+def batch_sharding(mesh: Mesh, ndim: int, batch_dim: int = 0) -> NamedSharding:
+    parts = [None] * ndim
+    ax = _batch_axes(mesh)
+    parts[batch_dim] = ax if len(ax) > 1 else ax[0]
+    return NamedSharding(mesh, P(*parts))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,231 @@
+"""Step builders: assemble (fn, input specs, shardings) for every
+(architecture x workload-shape) cell — consumed by the dry-run, the
+trainer, and the server.
+
+Cells:
+  train_*   -> ``train_step``  (loss + grads + AdamW update, remat'd)
+  prefill_* -> ``prefill_step`` (prompt -> last logits + decode cache)
+  decode_* / long_* -> ``serve_step`` (one new token against the cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import lm
+from ..optim import adamw
+from . import sharding as shd
+
+ENC_LEN_CAP = 4096        # encoder context for enc-dec decode shapes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _enc_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if shape.kind == "train":
+        return shape.seq_len
+    return min(shape.seq_len, ENC_LEN_CAP)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        specs = {"tokens": _sds((b, 1), jnp.int32)}
+        if cfg.mrope:
+            specs["positions3"] = _sds((3, b, 1), jnp.int32)
+        return specs
+    specs = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+    if cfg.vision_stub:
+        specs["vision_embeds"] = _sds((b, cfg.n_vision_tokens, cfg.d_model),
+                                      cfg.dtype)
+        specs["positions3"] = _sds((3, b, s), jnp.int32)
+    if cfg.enc_dec:
+        specs["enc_embeds"] = _sds((b, _enc_len(cfg, shape), cfg.d_model),
+                                   cfg.dtype)
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    specs: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in specs.items():
+        bdim = 1 if k == "positions3" else 0
+        out[k] = shd.batch_sharding(mesh, len(v.shape), bdim)
+        if v.shape[bdim] % _batch_div(mesh) != 0:
+            out[k] = shd.replicated(mesh)
+    return out
+
+
+def _batch_div(mesh: Mesh) -> int:
+    d = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        d *= mesh.shape["pod"]
+    return d
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Any                      # jit-able callable
+    args: Tuple[Any, ...]        # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+# wider models need deeper accumulation to fit 16 GB HBM (measured on
+# the dry-run memory_analysis; see EXPERIMENTS.md §Dry-run)
+MICROBATCH_OVERRIDES = {
+    "mixtral-8x7b": 16,
+    "starcoder2-15b": 16,
+    "deepseek-v2-lite-16b": 16,
+    "minitron-4b": 16,
+}
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec,
+                         mesh: Mesh) -> int:
+    """Gradient-accumulation depth: keep per-microbatch activation
+    footprint bounded.  The global batch divides evenly by construction
+    (global batches are powers of two)."""
+    local_batch = max(1, shape.global_batch // _batch_div(mesh))
+    return min(MICROBATCH_OVERRIDES.get(cfg.name, 8), local_batch)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               lr: float = 3e-4,
+               microbatches: Optional[int] = None,
+               perf: Optional["PerfOpts"] = None) -> Cell:
+    from ..models.perfopts import PerfOpts, use_perf_opts
+    if perf is None:
+        perf = PerfOpts()
+    perf = dataclasses.replace(
+        perf, mesh=mesh,
+        batch_axes=("pod", "data") if "pod" in mesh.axis_names
+        else ("data",))
+    p_specs = lm.param_specs(cfg)
+    p_axes = lm.logical_axes(cfg)
+    kind = "train" if shape.kind == "train" else "serve"
+    p_rules = shd.param_rules(cfg, mesh, "train" if kind == "train" else "serve")
+    p_shard = shd.tree_shardings(p_specs, p_axes, mesh, p_rules)
+    b_specs = batch_specs(cfg, shape)
+    b_shard = batch_shardings(cfg, shape, mesh, b_specs)
+
+    if shape.kind == "train":
+        o_specs = adamw.adamw_state_specs(p_specs)
+        o_shard = adamw.AdamWState(
+            count=shd.replicated(mesh),
+            mu=shd.tree_shardings(o_specs.mu, p_axes, mesh, p_rules),
+            nu=shd.tree_shardings(o_specs.nu, p_axes, mesh, p_rules))
+
+        mb = microbatches or default_microbatches(cfg, shape, mesh)
+
+        def train_step(params, opt_state, batch):
+            ctx = use_perf_opts(perf)
+            ctx.__enter__()      # active during tracing of this body
+            def micro(batch_i):
+                return jax.value_and_grad(
+                    lambda p: lm.lm_loss(p, cfg, batch_i))(params)
+
+            if mb > 1:
+                # gradient accumulation: scan over microbatches along the
+                # batch dim; grads accumulate in fp32 param-sharded buffers
+                def split(name, v):
+                    if name == "positions3":     # (3, B, S): batch at dim 1
+                        return v.reshape(3, mb, v.shape[1] // mb,
+                                         *v.shape[2:]).transpose(1, 0, 2, 3)
+                    return v.reshape(mb, v.shape[0] // mb, *v.shape[1:])
+
+                mbatch = {k: split(k, v) for k, v in batch.items()}
+
+                def acc_step(carry, batch_i):
+                    tot_loss, grads = carry
+                    li, gi = micro(batch_i)
+                    grads = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), grads, gi)
+                    return (tot_loss + li, grads), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.float32(0.0), zeros), mbatch)
+                loss = loss / mb
+                grads = jax.tree.map(lambda g: g / mb, grads)
+            else:
+                loss, grads = micro(batch)
+
+            grads, gnorm = adamw.clip_by_global_norm(grads, 1.0)
+            params, opt_state = adamw.adamw_update(grads, opt_state, params,
+                                                   lr=lr)
+            metrics = {"loss": loss, "grad_norm": gnorm}
+            ctx.__exit__(None, None, None)
+            return params, opt_state, metrics
+
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=train_step,
+            args=(p_specs, o_specs, b_specs),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard,
+                           {"loss": shd.replicated(mesh),
+                            "grad_norm": shd.replicated(mesh)}),
+            donate_argnums=(0, 1),
+        )
+
+    c_rules = shd.cache_rules(cfg, mesh, kind)
+    c_specs, c_axes = lm.cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                     enc_len=_enc_len(cfg, shape))
+    c_shard = shd.tree_shardings(c_specs, c_axes, mesh, c_rules)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            with use_perf_opts(perf):
+                return lm.prefill(params, cfg, batch)
+
+        logits_shard = shd.batch_sharding(mesh, 3)
+        if shape.global_batch % _batch_div(mesh) != 0:
+            logits_shard = shd.replicated(mesh)
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=prefill_step,
+            args=(p_specs, b_specs),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_shard, c_shard),
+        )
+
+    # decode
+    def serve_step(params, cache, batch, pos):
+        with use_perf_opts(perf):
+            return lm.decode_step(params, cfg, cache, batch, pos)
+
+    logits_shard = shd.batch_sharding(mesh, 3)
+    if shape.global_batch % _batch_div(mesh) != 0:
+        logits_shard = shd.replicated(mesh)
+    pos_spec = _sds((), jnp.int32)
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=serve_step,
+        args=(p_specs, c_specs, b_specs, pos_spec),
+        in_shardings=(p_shard, c_shard, b_shard, shd.replicated(mesh)),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+    )

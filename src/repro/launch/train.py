@@ -1,0 +1,71 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
+      --reduced --steps 200 --workdir /tmp/run1
+
+``--reduced`` trains the CPU-sized config of the same family (the
+end-to-end example path); without it, the full config is launched on
+the production mesh (real pod only).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from ..configs import ARCHS, get_config, reduced
+from ..configs.base import ShapeSpec
+from ..data import TokenStream, make_batch_iterator
+from ..launch.mesh import make_host_mesh, make_production_mesh
+from ..train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+        mesh = make_host_mesh()
+        shape = ShapeSpec("custom", "train", args.seq_len, args.batch)
+    else:
+        mesh = make_production_mesh()
+        from ..configs.base import SHAPES
+        shape = SHAPES["train_4k"]
+
+    stream = TokenStream(cfg.vocab, shape.global_batch, shape.seq_len,
+                         seed=args.seed)
+    extra = {}
+    import numpy as np
+    if cfg.enc_dec:
+        extra["enc_embeds"] = np.ones(
+            (shape.global_batch, shape.seq_len, cfg.d_model), np.float32)
+    if cfg.vision_stub:
+        nv = min(cfg.n_vision_tokens, shape.seq_len)
+        extra["vision_embeds"] = np.ones(
+            (shape.global_batch, nv, cfg.d_model), np.float32)
+        extra["positions3"] = np.broadcast_to(
+            np.arange(shape.seq_len, dtype=np.int32)[None, None],
+            (3, shape.global_batch, shape.seq_len)).copy()
+    data = make_batch_iterator(stream, extra)
+
+    tcfg = TrainerConfig(workdir=args.workdir, num_steps=args.steps,
+                         save_every=args.save_every, lr=args.lr)
+    trainer = Trainer(cfg, shape, mesh, tcfg, data, data_state=stream.state)
+    result = trainer.train(seed=args.seed)
+    print("final:", result)
+
+
+if __name__ == "__main__":
+    main()

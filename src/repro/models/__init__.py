@@ -1,0 +1,1 @@
+"""The 10 assigned LM architectures, pure JAX (scan-stacked, shardable)."""

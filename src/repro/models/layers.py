@@ -1,0 +1,486 @@
+"""Shared neural layers: norms, RoPE / M-RoPE, flash-style attention,
+KV caches, MLPs, MoE dispatch — pure functions over param dicts.
+
+Design constraints (see DESIGN.md §5):
+  * layers are `lax.scan`-stacked -> small HLO at 512 devices;
+  * attention is blockwise with an online softmax -> bounded temp memory
+    at 32k prefill (no S x S score materialization);
+  * everything lowers on the CPU backend (dry-run) and is shardable by
+    pjit — no Pallas in the model path (kernels/ is the CIM compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+DEFAULT_DTYPE = jnp.bfloat16
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, int, int],
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): the head dim is split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  positions3: (3, ..., S)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    # choose per-frequency position stream by section
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                         total_repeat_length=d // 2)   # (D/2,)
+    # gather: ang[..., s, f] = positions3[sec_ids[f], ..., s] * freqs[f]
+    p = jnp.moveaxis(positions3, 0, -1)                # (..., S, 3)
+    p_sel = jnp.take(p, sec_ids, axis=-1)              # (..., S, D/2)
+    ang = p_sel.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — pure jnp + lax.scan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    causal: bool = True
+    window: Optional[int] = None          # sliding-window size (None = full)
+    logit_softcap: Optional[float] = None
+    q_block: int = 512
+    kv_block: int = 512
+
+
+def _block_mask(qi: jnp.ndarray, kj: jnp.ndarray, spec: AttnSpec,
+                q_block: int, kv_block: int, kv_len: int) -> jnp.ndarray:
+    """(q_block, kv_block) bool mask for query block qi, kv block kj."""
+    q_pos = qi * q_block + jnp.arange(q_block)[:, None]
+    k_pos = kj * kv_block + jnp.arange(kv_block)[None, :]
+    m = k_pos < kv_len          # masks the padded tail of K/V
+    if spec.causal:
+        m &= k_pos <= q_pos
+    if spec.window is not None:
+        m &= k_pos > q_pos - spec.window
+    return m
+
+
+def _visible_pairs(nq: int, nk: int, qb: int, kb: int, spec: AttnSpec):
+    """(q-block, kv-block) pairs with at least one unmasked element."""
+    pairs = []
+    for qi in range(nq):
+        for kj in range(nk):
+            if spec.causal and kj * kb > qi * qb + qb - 1:
+                continue
+            if spec.window is not None and \
+                    kj * kb + kb - 1 <= qi * qb - spec.window:
+                continue
+            pairs.append((qi, kj))
+    return pairs
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              spec: AttnSpec = AttnSpec()) -> jnp.ndarray:
+    """Blockwise multi-query/grouped attention with online softmax.
+
+    q: (B, S, Hq, D); k, v: (B, S, Hkv, D); Hq % Hkv == 0.
+    Memory is O(q_block x kv_block) per step instead of O(S^2).
+
+    With PerfOpts.triangular_attention, only *visible* (q, kv) block
+    pairs are iterated (causal lower triangle / sliding-window band):
+    ~2x less compute+traffic for causal, ~S/window for banded prefill.
+    """
+    b, sq, hq, d = q.shape
+    s = k.shape[1]
+    dv = v.shape[-1]                 # may differ from d (MLA)
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qb = min(spec.q_block, sq)
+    kb = min(spec.kv_block, s)
+    # pad to whole blocks; padded keys are masked, padded queries sliced off
+    pq, pk = (-sq) % qb, (-s) % kb
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (sq + pq) // qb, (s + pk) // kb
+
+    qr = q.reshape(b, nq, qb, hkv, g, d)
+    kr = k.reshape(b, nk, kb, hkv, d)
+    vr = v.reshape(b, nk, kb, hkv, dv)
+
+    from .perfopts import current as _perf_current
+    if _perf_current().triangular_attention and (spec.causal or
+                                                 spec.window is not None):
+        out = _pair_attention(qr, kr, vr, spec, qb, kb, s, scale)
+        out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq + pq, hq, dv)
+        return out[:, :sq]
+
+    def q_step(_, qi):
+        qblk = qr[:, qi].astype(jnp.float32) * scale   # (B,qb,hkv,g,D)
+
+        @partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, kj):
+            m_prev, l_prev, acc = carry
+            kblk = kr[:, kj].astype(jnp.float32)
+            vblk = vr[:, kj].astype(jnp.float32)
+            sblk = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)
+            if spec.logit_softcap is not None:
+                sblk = jnp.tanh(sblk / spec.logit_softcap) * spec.logit_softcap
+            mask = _block_mask(qi, kj, spec, qb, kb, s)
+            sblk = jnp.where(mask[None, None, None], sblk, NEG_INF)
+            m_new = jnp.maximum(m_prev, sblk.max(axis=-1))
+            p = jnp.exp(sblk - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qb, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B,hkv,g,qb,Dv)
+        return None, out.astype(q.dtype)
+
+    # checkpoint both scan levels: backward recomputes score blocks
+    # (flash-attention-style) instead of saving O(S^2) residuals
+    q_step = partial(jax.checkpoint, prevent_cse=False)(q_step)
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq,B,hkv,g,qb,Dv)
+    out = jnp.moveaxis(outs, 0, 1)                        # (B,nq,hkv,g,qb,Dv)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, sq + pq, hq, dv)
+    return out[:, :sq]
+
+
+def _pair_attention(qr, kr, vr, spec: AttnSpec, qb: int, kb: int,
+                    kv_len: int, scale: float):
+    """Visible-pair blockwise attention.
+
+    qr: (B, nq, qb, hkv, g, D); kr/vr: (B, nk, kb, hkv, D[v]).
+    Returns (nq, B, hkv, g, qb, Dv) — same layout as the dense path's
+    stacked q-block outputs.  Accumulators for every q block ride the
+    scan carry; each step updates only its q block (dynamic slice/update
+    along the leading nq axis).
+    """
+    b, nq, _, hkv, g, d = qr.shape
+    nk = kr.shape[1]
+    dv = vr.shape[-1]
+    pairs = _visible_pairs(nq, nk, qb, kb, spec)
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    kj_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    m0 = jnp.full((nq, b, hkv, g, qb), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, hkv, g, qb), jnp.float32)
+    a0 = jnp.zeros((nq, b, hkv, g, qb, dv), jnp.float32)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, i):
+        m, l, acc = carry
+        qi, kj = qi_arr[i], kj_arr[i]
+        qblk = jax.lax.dynamic_index_in_dim(qr, qi, axis=1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kr, kj, axis=1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vr, kj, axis=1, keepdims=False)
+        sblk = jnp.einsum("bqhgd,bkhd->bhgqk",
+                          qblk.astype(jnp.float32) * scale,
+                          kblk.astype(jnp.float32))
+        if spec.logit_softcap is not None:
+            sblk = jnp.tanh(sblk / spec.logit_softcap) * spec.logit_softcap
+        mask = _block_mask(qi, kj, spec, qb, kb, kv_len)
+        sblk = jnp.where(mask[None, None, None], sblk, NEG_INF)
+        m_prev = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_prev = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_prev = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_prev, sblk.max(axis=-1))
+        p = jnp.exp(sblk - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+        a_new = a_prev * corr[..., None] + pv
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(len(pairs)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(qr.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, length: jnp.ndarray,
+                     spec: AttnSpec = AttnSpec(),
+                     extra_kv=None, invalid_slot=None) -> jnp.ndarray:
+    """Single-step attention over a (possibly sharded) KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, S, Hkv, D); length: () current length.
+    The softmax over the sharded S axis partitions cleanly under pjit
+    (XLA inserts the max/sum all-reduces).
+
+    ``extra_kv=(k_new, v_new)`` — append-style decode: the cache holds
+    only PAST tokens (entries with index < length are valid) and the
+    current token's K/V ride separately; the caller writes them to the
+    cache afterwards (one top-level in-place update instead of a
+    rewritten cache per layer).
+    """
+    from .perfopts import current as _perf_current
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    s = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    if _perf_current().decode_opt:
+        # keep the cache in its storage dtype; accumulate in f32 via
+        # preferred_element_type (no materialized f32 cache copy)
+        qr = (q.reshape(b, hkv, g, d).astype(jnp.float32)
+              * scale).astype(k_cache.dtype)
+        scores = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                            preferred_element_type=jnp.float32)
+    else:
+        qr = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
+        scores = jnp.einsum("bhgd,bshd->bhgs", qr,
+                            k_cache.astype(jnp.float32))
+    if spec.logit_softcap is not None:
+        scores = jnp.tanh(scores / spec.logit_softcap) * spec.logit_softcap
+    pos = jnp.arange(s)
+    valid = pos[None] < length
+    if spec.window is not None:
+        valid &= pos[None] > length - 1 - spec.window
+    if invalid_slot is not None:
+        # append-style rolling window: the slot about to be overwritten
+        # holds the expired token and must not be attended
+        valid &= pos[None] != invalid_slot
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+
+    if extra_kv is None:
+        p = jax.nn.softmax(scores, axis=-1)
+        if _perf_current().decode_opt:
+            out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype),
+                             v_cache, preferred_element_type=jnp.float32)
+        else:
+            out = jnp.einsum("bhgs,bshd->bhgd", p,
+                             v_cache.astype(jnp.float32))
+        return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+    # append-style: combine the sharded-cache softmax with the current
+    # token via a two-part online softmax — NO concat along the sharded
+    # seq axis (a concat loses the sharding and forces the partitioner
+    # to all-gather the f32 cache; measured on the decode baseline).
+    k_new, v_new = extra_kv                      # (B, 1, Hkv, D)
+    s_new = jnp.einsum("bhgd,bshd->bhgs", qr.astype(jnp.float32),
+                       k_new.astype(jnp.float32))[..., 0]      # (B,Hkv,g)
+    if spec.logit_softcap is not None:
+        s_new = jnp.tanh(s_new / spec.logit_softcap) * spec.logit_softcap
+    m = jnp.maximum(scores.max(axis=-1), s_new)
+    p_cache = jnp.exp(scores - m[..., None])
+    p_new = jnp.exp(s_new - m)
+    denom = p_cache.sum(axis=-1) + p_new
+    if _perf_current().decode_opt:
+        ctx = jnp.einsum("bhgs,bshd->bhgd", p_cache.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+    else:
+        ctx = jnp.einsum("bhgs,bshd->bhgd", p_cache,
+                         v_cache.astype(jnp.float32))
+    ctx = ctx + p_new[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32)
+    out = ctx / denom[..., None]
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def cache_update(cache: jnp.ndarray, new: jnp.ndarray,
+                 pos: jnp.ndarray) -> jnp.ndarray:
+    """Write one token's K or V at position ``pos`` (dynamic)."""
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                               pos, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def gated_mlp(x: jnp.ndarray, wi: jnp.ndarray, wg: jnp.ndarray,
+              wo: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, wi)
+    gate = jnp.einsum("...d,df->...f", x, wg)
+    gate = _act(gate, act)
+    return jnp.einsum("...f,fd->...d", h * gate, wo)
+
+
+def dense_mlp(x: jnp.ndarray, wi: jnp.ndarray, wo: jnp.ndarray,
+              act: str = "gelu") -> jnp.ndarray:
+    h = _act(jnp.einsum("...d,df->...f", x, wi), act)
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+def _act(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "relu":
+        return jax.nn.relu(x)
+    if act == "relu2":      # squared ReLU (nemotron/minitron)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(act)
+
+
+# ---------------------------------------------------------------------------
+# MoE (dense one-hot dispatch: SPMD-friendly, experts shard on "model")
+# ---------------------------------------------------------------------------
+
+def moe_mlp(x: jnp.ndarray, router_w: jnp.ndarray, wi: jnp.ndarray,
+            wg: jnp.ndarray, wo: jnp.ndarray, top_k: int,
+            act: str = "silu",
+            shared: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+            capacity_factor: float = 1.25,
+            token_chunk: int = 2048) -> jnp.ndarray:
+    """Capacity-based top-k MoE (Switch/mesh-TF-style dispatch).
+
+    x: (B,S,D); wi/wg: (E,D,F); wo: (E,F,D); router_w: (D,E).
+
+    Tokens are processed in chunks (lax.scan) so the dispatch/expert
+    intermediates stay O(chunk) instead of O(B*S); per chunk every
+    expert receives at most C = ceil(top_k * chunk * cf / E) tokens
+    (overflow drops — standard).  Under expert-sharding the dispatch
+    einsums partition into the expected all-to-all pattern.
+    """
+    b, s, d = x.shape
+    e = router_w.shape[-1]
+    tokens = x.reshape(b * s, d)
+    t_all = tokens.shape[0]
+    tc = min(token_chunk, t_all)
+    pad = (-t_all) % tc
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    nchunk = tokens.shape[0] // tc
+    cap = max(1, int(math.ceil(top_k * tc * capacity_factor / e)))
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(_, xt):                       # xt: (tc, d)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                            router_w.astype(jnp.float32))
+        gates = jax.nn.softmax(logits, axis=-1)
+        weights, ids = jax.lax.top_k(gates, top_k)     # (tc, k)
+        weights = weights / jnp.maximum(
+            weights.sum(-1, keepdims=True), 1e-9)
+        # position of each (token, slot) within its expert's capacity
+        oh = jax.nn.one_hot(ids, e, dtype=jnp.int32)   # (tc, k, e)
+        flat = oh.reshape(tc * top_k, e)
+        pos = (jnp.cumsum(flat, axis=0) - flat)        # entries before us
+        pos = jnp.einsum("xe,xe->x", pos.astype(jnp.float32),
+                         flat.astype(jnp.float32)).astype(jnp.int32)
+        pos = pos.reshape(tc, top_k)
+        keep = pos < cap
+        disp = jnp.zeros((tc, e, cap), x.dtype)
+        comb = jnp.zeros((tc, e, cap), jnp.float32)
+        for j in range(top_k):
+            oh_e = jax.nn.one_hot(ids[:, j], e, dtype=x.dtype)
+            oh_c = jax.nn.one_hot(pos[:, j], cap, dtype=x.dtype)
+            oh_c = oh_c * keep[:, j][:, None].astype(x.dtype)
+            dk = jnp.einsum("te,tc->tec", oh_e, oh_c)
+            disp = disp + dk
+            comb = comb + dk.astype(jnp.float32) * weights[:, j][:, None, None]
+        xe = jnp.einsum("tec,td->ecd", disp, xt)       # (e, cap, d)
+        from .perfopts import current as _perf_current
+        opts = _perf_current()
+        if opts.moe_capacity_shard and opts.mesh is not None:
+            # shard the per-expert token buffers over "data": the expert
+            # matmuls then contract a LOCAL d (weights all-gather once
+            # per layer) instead of all-reducing (e,cap,f) partials per
+            # chunk — measured dominant collective on mixtral train
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            xe = jax.lax.with_sharding_constraint(
+                xe, NamedSharding(opts.mesh, P(None, "data", None)))
+        h = jnp.einsum("ecd,edf->ecf", xe, wi)
+        g = _act(jnp.einsum("ecd,edf->ecf", xe, wg), act)
+        ye = jnp.einsum("ecf,efd->ecd", h * g, wo)     # (e, cap, d)
+        yt = jnp.einsum("tec,ecd->td", comb.astype(x.dtype), ye)
+        return None, yt
+
+    _, y = jax.lax.scan(chunk_step, None, tokens.reshape(nchunk, tc, d))
+    y = y.reshape(-1, d)[:t_all].reshape(b, s, d)
+    if shared is not None:
+        swi, swg, swo = shared
+        y = y + gated_mlp(x, swi, swg, swo, act)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization over spec trees
+# ---------------------------------------------------------------------------
+
+def init_from_specs(specs: Params, rng: jax.Array,
+                    scale: float = 0.02) -> Params:
+    """Materialize a ShapeDtypeStruct tree with scaled-normal params."""
+    leaves, treedef = jax.tree.flatten(specs)
+    keys = jax.random.split(rng, len(leaves))
+    vals = []
+    for key, leaf in zip(keys, leaves):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            v = (jax.random.normal(key, leaf.shape, jnp.float32)
+                 * scale).astype(leaf.dtype)
+        else:
+            v = jnp.zeros(leaf.shape, leaf.dtype)
+        vals.append(v)
+    return jax.tree.unflatten(treedef, vals)

@@ -1,0 +1,932 @@
+"""Generic language model covering the assigned architecture pool.
+
+One config-driven implementation provides:
+  * attention mixers: GQA/MHA (full, sliding-window, alternating),
+    softcaps, QKV bias, RoPE / M-RoPE; MLA (DeepSeek-V2) with compressed
+    KV cache and absorbed decode; Mamba2 SSD; Hymba parallel attn+SSM.
+  * MLPs: gated (SwiGLU/GeGLU), dense, MoE (top-k, shared experts), none.
+  * encoder-decoder (Seamless-M4T): bidirectional encoder + causal
+    decoder with cross-attention.
+
+Layers are scan-stacked over the repeating ``cfg.unit`` recipe; params
+are plain nested dicts with a parallel *logical-axes* tree consumed by
+launch/sharding.py.  Entry points: ``forward`` / ``lm_loss`` (train),
+``prefill`` and ``decode_step`` (serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LayerSpec, ModelConfig
+from . import ssm as ssm_mod
+from .layers import (AttnSpec, apply_mrope, apply_rope, attention,
+                     cache_update, decode_attention, dense_mlp, gated_mlp,
+                     init_from_specs, moe_mlp, rms_norm, softcap)
+
+Params = Dict[str, Any]
+P_AXES = "__axes__"  # sentinel unused; axes tree is separate
+
+
+def _sds(shape, dtype=None):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype or jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs + logical axes
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sp = {"wq": _sds((d, h * hd)), "wk": _sds((d, k * hd)),
+          "wv": _sds((d, k * hd)), "wo": _sds((h * hd, d))}
+    ax = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+          "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias:
+        sp.update({"bq": _sds((h * hd,)), "bk": _sds((k * hd,)),
+                   "bv": _sds((k * hd,))})
+        ax.update({"bq": ("heads",), "bk": ("kv",), "bv": ("kv",)})
+    return sp, ax
+
+
+def _mla_specs(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    sp = {"wq": _sds((d, h * qd)),
+          "w_dkv": _sds((d, cfg.kv_lora + cfg.qk_rope_dim)),
+          "kv_norm": _sds((cfg.kv_lora,), jnp.float32),
+          "w_uk": _sds((cfg.kv_lora, h * cfg.qk_nope_dim)),
+          "w_uv": _sds((cfg.kv_lora, h * cfg.v_head_dim)),
+          "wo": _sds((h * cfg.v_head_dim, d))}
+    ax = {"wq": ("embed", "heads"), "w_dkv": ("embed", None),
+          "kv_norm": (None,), "w_uk": (None, "heads"),
+          "w_uv": (None, "heads"), "wo": ("heads", "embed")}
+    return sp, ax
+
+
+def _ssm_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.n_ssm_heads
+    n = cfg.ssm_state
+    sp = {"w_z": _sds((d, di)), "w_x": _sds((d, di)),
+          "w_B": _sds((d, n)), "w_C": _sds((d, n)), "w_dt": _sds((d, h)),
+          "A_log": _sds((h,), jnp.float32), "D_skip": _sds((h,), jnp.float32),
+          "dt_bias": _sds((h,), jnp.float32),
+          "ssm_norm": _sds((di,), jnp.float32),
+          "out_proj": _sds((di, d))}
+    ax = {"w_z": ("embed", "inner"), "w_x": ("embed", "inner"),
+          "w_B": ("embed", None), "w_C": ("embed", None),
+          "w_dt": ("embed", None), "A_log": (None,), "D_skip": (None,),
+          "dt_bias": (None,), "ssm_norm": (None,),
+          "out_proj": ("inner", "embed")}
+    return sp, ax
+
+
+def _mlp_specs(cfg: ModelConfig, kind: str):
+    d, f = cfg.d_model, cfg.d_ff
+    if kind == "none":
+        return {}, {}
+    if kind == "gated":
+        return ({"wi": _sds((d, f)), "wg": _sds((d, f)),
+                 "wo_mlp": _sds((f, d))},
+                {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"),
+                 "wo_mlp": ("mlp", "embed")})
+    if kind == "dense":
+        return ({"wi": _sds((d, f)), "wo_mlp": _sds((f, d))},
+                {"wi": ("embed", "mlp"), "wo_mlp": ("mlp", "embed")})
+    if kind == "moe":
+        e, fm = cfg.n_experts, cfg.moe_d_ff
+        sp = {"router": _sds((d, e), jnp.float32),
+              "wi": _sds((e, d, fm)), "wg": _sds((e, d, fm)),
+              "wo_mlp": _sds((e, fm, d))}
+        ax = {"router": ("embed", None),
+              "wi": ("expert", "embed", "mlp_e"),
+              "wg": ("expert", "embed", "mlp_e"),
+              "wo_mlp": ("expert", "mlp_e", "embed")}
+        if cfg.n_shared_experts:
+            fs = fm * cfg.n_shared_experts
+            sp.update({"swi": _sds((d, fs)), "swg": _sds((d, fs)),
+                       "swo": _sds((fs, d))})
+            ax.update({"swi": ("embed", "mlp"), "swg": ("embed", "mlp"),
+                       "swo": ("mlp", "embed")})
+        return sp, ax
+    raise ValueError(kind)
+
+
+def _layer_specs(cfg: ModelConfig, spec: LayerSpec, cross_attn: bool = False):
+    sp: Params = {"norm": _sds((cfg.d_model,), jnp.float32)}
+    ax: Params = {"norm": (None,)}
+    if spec.mixer == "attn":
+        s, a = _attn_specs(cfg)
+        sp.update(s), ax.update(a)
+    elif spec.mixer == "mla":
+        s, a = _mla_specs(cfg)
+        sp.update(s), ax.update(a)
+    elif spec.mixer == "ssm":
+        s, a = _ssm_specs(cfg)
+        sp.update(s), ax.update(a)
+    elif spec.mixer == "hybrid":
+        s, a = _attn_specs(cfg)
+        sp["attn"] = s
+        ax["attn"] = a
+        s, a = _ssm_specs(cfg)
+        del s["w_z"], a["w_z"]          # hymba branch: no gate path
+        sp["ssm"] = s
+        ax["ssm"] = a
+        sp.update({"fuse_a": _sds((cfg.d_model,), jnp.float32),
+                   "fuse_s": _sds((cfg.d_model,), jnp.float32)})
+        ax.update({"fuse_a": (None,), "fuse_s": (None,)})
+    else:
+        raise ValueError(spec.mixer)
+    if cross_attn:
+        s, a = _attn_specs(cfg)
+        sp["cross"] = s
+        ax["cross"] = a
+        sp["cross_norm"] = _sds((cfg.d_model,), jnp.float32)
+        ax["cross_norm"] = (None,)
+    if spec.mlp != "none":
+        sp["mlp_norm"] = _sds((cfg.d_model,), jnp.float32)
+        ax["mlp_norm"] = (None,)
+        s, a = _mlp_specs(cfg, spec.mlp)
+        sp.update(s), ax.update(a)
+    return sp, ax
+
+
+def _stack(tree: Params, n: int) -> Params:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n,) + tuple(x.shape), x.dtype), tree)
+
+
+def _stack_axes(tree: Params) -> Params:
+    return jax.tree.map(lambda a: ("layers",) + tuple(a), tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    return _specs_and_axes(cfg)[0]
+
+
+def logical_axes(cfg: ModelConfig) -> Params:
+    return _specs_and_axes(cfg)[1]
+
+
+def _specs_and_axes(cfg: ModelConfig) -> Tuple[Params, Params]:
+    # the embedding's feature dim stays unsharded: a (vocab x feature)
+    # double-sharded table makes the token gather fall into SPMD's
+    # "involuntary full rematerialization" path (observed on the dry-run)
+    sp: Params = {"embed": _sds((cfg.vocab, cfg.d_model)),
+                  "final_norm": _sds((cfg.d_model,), jnp.float32)}
+    ax: Params = {"embed": ("vocab", None), "final_norm": (None,)}
+
+    pre_sp, pre_ax = [], []
+    for spec in cfg.pre:
+        s, a = _layer_specs(cfg, spec)
+        pre_sp.append(s), pre_ax.append(a)
+    if pre_sp:
+        sp["pre"] = tuple(pre_sp)
+        ax["pre"] = tuple(pre_ax)
+
+    unit_sp, unit_ax = {}, {}
+    r = cfg.n_unit_repeats
+    for i, spec in enumerate(cfg.unit):
+        s, a = _layer_specs(cfg, spec, cross_attn=cfg.enc_dec)
+        unit_sp[f"u{i}"] = _stack(s, r)
+        unit_ax[f"u{i}"] = _stack_axes(a)
+    sp["unit"] = unit_sp
+    ax["unit"] = unit_ax
+
+    if cfg.enc_dec:
+        es, ea = _layer_specs(cfg, LayerSpec(mixer="attn", mlp="dense"))
+        sp["enc_unit"] = _stack(es, cfg.n_enc_layers)
+        ax["enc_unit"] = _stack_axes(ea)
+        sp["enc_norm"] = _sds((cfg.d_model,), jnp.float32)
+        ax["enc_norm"] = (None,)
+    return sp, ax
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Params:
+    params = init_from_specs(param_specs(cfg), rng)
+    # SSM decay init: A in [-1, -e] keeps exp(dt*A) in (0,1)
+    def fix(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "A_log":
+            return jnp.zeros_like(x)          # A = -1
+        if name == "dt_bias":
+            return jnp.full_like(x, -2.0)     # small positive dt
+        return x
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+# ---------------------------------------------------------------------------
+# Mixers (forward, full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg: ModelConfig, spec: LayerSpec, causal: bool = True):
+    return AttnSpec(causal=causal, window=spec.window,
+                    logit_softcap=cfg.attn_softcap)
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    b, s, _ = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    kk = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, kk, v = q + p["bq"], kk + p["bk"], v + p["bv"]
+    return (q.reshape(b, s, h, hd), kk.reshape(b, s, k, hd),
+            v.reshape(b, s, k, hd))
+
+
+def _rope_qk(cfg: ModelConfig, q, k, positions, positions3):
+    if cfg.mrope and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _attn_reshard(t: jnp.ndarray) -> jnp.ndarray:
+    """PerfOpts lever: explicit sharding for attention activations.
+
+    The baseline lets SPMD propagate the projections' model-sharded
+    feature dim into the (B,S,H,D) views, which shards head_dim and
+    turns every score-block einsum into an all-reduce.  "auto" instead
+    shards the *head* axis when it divides the model axis, else
+    replicates attention over "model" (a little redundant compute for
+    zero per-block collectives)."""
+    from .perfopts import current
+    opts = current()
+    if opts.attn_reshard == "none" or opts.mesh is None:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = opts.mesh
+    batch = opts.batch_axes if len(opts.batch_axes) > 1 else opts.batch_axes[0]
+    h = t.shape[2]
+    head_ax = "model" if h % mesh.shape["model"] == 0 else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, P(batch, None, head_ax, None)))
+
+
+def attn_mixer(p: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
+               positions3=None, causal=True):
+    q, k, v = _qkv(p, cfg, x)
+    q, k, v = _attn_reshard(q), _attn_reshard(k), _attn_reshard(v)
+    q, k = _rope_qk(cfg, q, k, positions, positions3)
+    out = attention(q, k, v, _attn_spec(cfg, spec, causal))
+    b, s, _, _ = q.shape
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, -1), p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def mla_mixer(p: Params, cfg: ModelConfig, spec: LayerSpec, x, positions):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dh->bsh", x, p["w_dkv"])
+    ckv, k_rope = dkv[..., :cfg.kv_lora], dkv[..., cfg.kv_lora:]
+    ckv = rms_norm(ckv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)                   # (B,S,1,rd)
+    k_nope = jnp.einsum("bsl,lh->bsh", ckv, p["w_uk"]).reshape(b, s, h, nd)
+    v = jnp.einsum("bsl,lh->bsh", ckv, p["w_uv"]).reshape(b, s, h, vd)
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope,
+                          jnp.broadcast_to(k_rope, (b, s, h, rd))], axis=-1)
+    out = attention(qf, kf, v, _attn_spec(cfg, spec))
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, h * vd), p["wo"])
+    return y, {"ckv": ckv, "kr": k_rope[:, :, 0, :]}
+
+
+def _ssm_inputs(p: Params, cfg: ModelConfig, x):
+    xs = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    B = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    C = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    return xs, B, C, dt, A
+
+
+def ssm_mixer(p: Params, cfg: ModelConfig, x, gated: bool = True):
+    b, s, _ = x.shape
+    h, hp = cfg.n_ssm_heads, cfg.ssm_headdim
+    xs, B, C, dt, A = _ssm_inputs(p, cfg, x)
+    y = ssm_mod.ssd_scan(xs.reshape(b, s, h, hp), dt, A, B, C,
+                         p["D_skip"], cfg.ssm_chunk).reshape(b, s, -1)
+    if gated and "w_z" in p:
+        z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+        y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["ssm_norm"])
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def hybrid_mixer(p: Params, cfg: ModelConfig, spec: LayerSpec, x, positions):
+    ya, kv = attn_mixer(p["attn"], cfg, spec, x, positions)
+    ys = ssm_mixer(p["ssm"], cfg, x, gated=False)
+    y = 0.5 * (rms_norm(ya, p["fuse_a"]) + rms_norm(ys, p["fuse_s"]))
+    return y, kv
+
+
+def mlp_block(p: Params, cfg: ModelConfig, spec: LayerSpec, x):
+    if spec.mlp == "none":
+        return jnp.zeros_like(x), False
+    h = rms_norm(x, p["mlp_norm"])
+    if spec.mlp == "gated":
+        return gated_mlp(h, p["wi"], p["wg"], p["wo_mlp"], cfg.act), True
+    if spec.mlp == "dense":
+        return dense_mlp(h, p["wi"], p["wo_mlp"], cfg.act), True
+    shared = (p["swi"], p["swg"], p["swo"]) if "swi" in p else None
+    return moe_mlp(h, p["router"], p["wi"], p["wg"], p["wo_mlp"],
+                   cfg.top_k, cfg.act, shared), True
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence layer + stack
+# ---------------------------------------------------------------------------
+
+def layer_forward(p: Params, cfg: ModelConfig, spec: LayerSpec, x,
+                  positions, positions3=None, enc_out=None,
+                  collect_cache: bool = False, cache_len: int = 0):
+    """One transformer layer; returns (x, cache_entry or None)."""
+    h = rms_norm(x, p["norm"])
+    cache = None
+    if spec.mixer == "attn":
+        y, kv = attn_mixer(p, cfg, spec, h, positions, positions3)
+    elif spec.mixer == "mla":
+        y, kv = mla_mixer(p, cfg, spec, h, positions)
+    elif spec.mixer == "ssm":
+        y, kv = ssm_mixer(p, cfg, h), None
+    elif spec.mixer == "hybrid":
+        y, kv = hybrid_mixer(p, cfg, spec, h, positions)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+
+    if enc_out is not None:                      # decoder cross-attention
+        hc = rms_norm(x, p["cross_norm"])
+        q, _, _ = _qkv(p["cross"], cfg, hc)
+        ck = jnp.einsum("bsd,dh->bsh", enc_out, p["cross"]["wk"])
+        cv = jnp.einsum("bsd,dh->bsh", enc_out, p["cross"]["wv"])
+        b, se, _ = enc_out.shape
+        ck = ck.reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+        cv = cv.reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qkv_bias:
+            pass
+        out = attention(q, ck, cv, AttnSpec(causal=False))
+        x = x + jnp.einsum("bsh,hd->bsd",
+                           out.reshape(*out.shape[:2], -1),
+                           p["cross"]["wo"])
+
+    y, has_mlp = mlp_block(p, cfg, spec, x)
+    if has_mlp:
+        x = x + y
+
+    if collect_cache:
+        cache = _make_cache_entry(cfg, spec, kv, cache_len, x.shape[0],
+                                  positions)
+    return x, cache
+
+
+def _cache_seq_len(cfg: ModelConfig, spec: LayerSpec, seq_len: int) -> int:
+    if spec.window is not None:
+        return min(seq_len, spec.window)
+    return seq_len
+
+
+def _make_cache_entry(cfg, spec, kv, cache_len, batch, positions):
+    """Build a decode cache entry from prefill-computed K/V (keep the
+    last ``cache_len`` positions; window layers keep the window)."""
+    if kv is None:        # ssm — state comes from a dedicated prefill pass
+        return None
+    out = {}
+    for key, val in kv.items():
+        s = val.shape[1]
+        keep = min(cache_len, s)
+        ent = val[:, s - keep:]
+        if keep < cache_len:
+            pad = jnp.zeros((val.shape[0], cache_len - keep) + val.shape[2:],
+                            val.dtype)
+            ent = jnp.concatenate([ent, pad], axis=1)
+        out[key] = ent
+    return out
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            remat: bool = False) -> jnp.ndarray:
+    """Token (+stub-modality) inputs -> final hidden states (B,S,D)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.vision_stub and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(cfg.dtype)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    positions3 = batch.get("positions3")
+
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, batch["enc_embeds"], remat=remat)
+
+    for p, spec in zip(params.get("pre", ()), cfg.pre):
+        x, _ = layer_forward(p, cfg, spec, x, positions, positions3, None)
+
+    def unit_body(x, unit_p):
+        for i, spec in enumerate(cfg.unit):
+            x, _ = layer_forward(unit_p[f"u{i}"], cfg, spec, x, positions,
+                                 positions3, enc_out)
+        return x, None
+
+    body = _maybe_remat(unit_body) if remat else unit_body
+    x, _ = jax.lax.scan(body, x, params["unit"])
+    return rms_norm(x, params["final_norm"])
+
+
+def _maybe_remat(fn):
+    """Unit-scan remat with the PerfOpts-selected policy: "full"
+    recomputes everything (minimum memory), "dots" saves matmul outputs
+    (less backward recompute -> lower compute/memory roofline terms, at
+    a measured temp-memory cost)."""
+    from .perfopts import current
+    if current().remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def encode(params: Params, cfg: ModelConfig, enc_embeds: jnp.ndarray,
+           remat: bool = False) -> jnp.ndarray:
+    x = enc_embeds.astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+    spec = LayerSpec(mixer="attn", mlp="dense")
+
+    def body(x, p):
+        h = rms_norm(x, p["norm"])
+        y, _ = attn_mixer(p, cfg, spec, h, positions, causal=False)
+        x = x + y
+        y, _ = mlp_block(p, cfg, spec, x)
+        return x + y, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_unit"])
+    return rms_norm(x, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence to bound the logits temp)
+# ---------------------------------------------------------------------------
+
+def logits_fn(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            chunk: int = 512, remat: bool = True) -> jnp.ndarray:
+    x = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    b, s, d = x.shape
+    c = min(chunk, s)
+    nc = s // c
+    xc = x.reshape(b, nc, c, d)
+    lc = labels.reshape(b, nc, c)
+
+    # checkpointed: the (B, chunk, vocab) logits are recomputed in the
+    # backward instead of being saved for every chunk
+    @partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, i):
+        tot, cnt = carry
+        logits = logits_fn(params, cfg, xc[:, i])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[:, i][..., None], axis=-1)[..., 0]
+        return (tot + jnp.sum(lse - ll), cnt + lse.size), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), 0), jnp.arange(nc))
+    return tot / cnt
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache specs, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache_specs(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                       seq_len: int):
+    cl = _cache_seq_len(cfg, spec, seq_len)
+    k, hd = cfg.n_kv_heads, cfg.head_dim
+    if spec.mixer == "attn":
+        sp = {"k": _sds((batch, cl, k, hd)), "v": _sds((batch, cl, k, hd))}
+        ax = {"k": ("batch", "kvseq", None, None),
+              "v": ("batch", "kvseq", None, None)}
+    elif spec.mixer == "mla":
+        sp = {"ckv": _sds((batch, cl, cfg.kv_lora)),
+              "kr": _sds((batch, cl, cfg.qk_rope_dim))}
+        ax = {"ckv": ("batch", "kvseq", None),
+              "kr": ("batch", "kvseq", None)}
+    elif spec.mixer == "ssm":
+        sp = {"h": _sds((batch, cfg.n_ssm_heads, cfg.ssm_headdim,
+                         cfg.ssm_state), jnp.float32)}
+        ax = {"h": ("batch", "ssm_heads", None, None)}
+    elif spec.mixer == "hybrid":
+        sp = {"k": _sds((batch, cl, k, hd)), "v": _sds((batch, cl, k, hd)),
+              "h": _sds((batch, cfg.n_ssm_heads, cfg.ssm_headdim,
+                         cfg.ssm_state), jnp.float32)}
+        ax = {"k": ("batch", "kvseq", None, None),
+              "v": ("batch", "kvseq", None, None),
+              "h": ("batch", "ssm_heads", None, None)}
+    else:
+        raise ValueError(spec.mixer)
+    return sp, ax
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                enc_len: int = 0) -> Tuple[Params, Params]:
+    sp: Params = {}
+    ax: Params = {}
+    pre_sp, pre_ax = [], []
+    for spec in cfg.pre:
+        s, a = _layer_cache_specs(cfg, spec, batch, seq_len)
+        pre_sp.append(s), pre_ax.append(a)
+    if pre_sp:
+        sp["pre"], ax["pre"] = tuple(pre_sp), tuple(pre_ax)
+    unit_sp, unit_ax = {}, {}
+    r = cfg.n_unit_repeats
+    for i, spec in enumerate(cfg.unit):
+        s, a = _layer_cache_specs(cfg, spec, batch, seq_len)
+        unit_sp[f"u{i}"] = _stack(s, r)
+        unit_ax[f"u{i}"] = _stack_axes(a)
+    sp["unit"], ax["unit"] = unit_sp, unit_ax
+    if cfg.enc_dec:
+        k, hd = cfg.n_kv_heads, cfg.head_dim
+        sp["cross"] = {"k": _sds((r, batch, enc_len, k, hd)),
+                       "v": _sds((r, batch, enc_len, k, hd))}
+        ax["cross"] = {"k": ("layers", "batch", None, None, None),
+                       "v": ("layers", "batch", None, None, None)}
+    return sp, ax
+
+
+def _decode_mixer(p, cfg, spec, h, cache, pos, positions3=None):
+    """One-token mixer against the cache; returns (y, new_cache).
+
+    Under PerfOpts.decode_opt the mixer does NOT rewrite the cache: it
+    attends over past entries plus the current token's K/V (append
+    style) and returns only the small per-token update — decode_step
+    writes it into the stacked cache with one in-place update per leaf.
+    """
+    from .perfopts import current as _perf_current
+    append = _perf_current().decode_opt
+    b = h.shape[0]
+    if spec.mixer in ("attn", "hybrid"):
+        ap = p["attn"] if spec.mixer == "hybrid" else p
+        q, k, v = _qkv(ap, cfg, h)
+        posv = jnp.full((b, 1), pos)
+        if cfg.mrope and positions3 is not None:
+            q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, posv, cfg.rope_theta)
+            k = apply_rope(k, posv, cfg.rope_theta)
+        cl = cache["k"].shape[1]
+        slot = pos if spec.window is None else pos % cl
+        aspec = AttnSpec(causal=True, window=None,
+                         logit_softcap=cfg.attn_softcap)
+        if append:
+            length = pos if spec.window is None else jnp.minimum(pos, cl)
+            inv = slot if spec.window is not None else None
+            out = decode_attention(q, cache["k"], cache["v"], length, aspec,
+                                   extra_kv=(k, v), invalid_slot=inv)
+            ya = jnp.einsum("bsh,hd->bsd", out.reshape(b, 1, -1), ap["wo"])
+            new_cache = dict(cache, k=k, v=v)   # per-token updates only
+            if spec.mixer == "attn":
+                return ya, new_cache
+            new_k = new_v = None
+        else:
+            new_k = cache_update(cache["k"], k, slot)
+            new_v = cache_update(cache["v"], v, slot)
+            if spec.window is not None:
+                # rolling window cache: slots < min(pos+1, cl) are valid
+                length = jnp.minimum(pos + 1, cl)
+            else:
+                length = pos + 1
+            out = decode_attention(q, new_k, new_v, length, aspec)
+            ya = jnp.einsum("bsh,hd->bsd", out.reshape(b, 1, -1), ap["wo"])
+            new_cache = dict(cache, k=new_k, v=new_v)
+            if spec.mixer == "attn":
+                return ya, new_cache
+        # hybrid: add the SSM branch
+        sp_ = p["ssm"]
+        xs = jnp.einsum("bsd,di->bsi", h, sp_["w_x"])[:, 0]
+        B = jnp.einsum("bsd,dn->bsn", h, sp_["w_B"])[:, 0]
+        C = jnp.einsum("bsd,dn->bsn", h, sp_["w_C"])[:, 0]
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,dh->bsh", h, sp_["w_dt"])[:, 0].astype(jnp.float32)
+            + sp_["dt_bias"])
+        A = -jnp.exp(sp_["A_log"])
+        hs, hp_ = cfg.n_ssm_heads, cfg.ssm_headdim
+        hn, ys = ssm_mod.ssd_decode_step(cache["h"], xs.reshape(b, hs, hp_),
+                                         dt, A, B, C, sp_["D_skip"])
+        ys = rms_norm(ys.reshape(b, 1, -1), sp_["ssm_norm"])
+        ys = jnp.einsum("bsi,id->bsd", ys, sp_["out_proj"])
+        y = 0.5 * (rms_norm(ya, p["fuse_a"]) + rms_norm(ys, p["fuse_s"]))
+        return y, dict(new_cache, h=hn)
+
+    if spec.mixer == "ssm":
+        xs = jnp.einsum("bsd,di->bsi", h, p["w_x"])[:, 0]
+        B = jnp.einsum("bsd,dn->bsn", h, p["w_B"])[:, 0]
+        C = jnp.einsum("bsd,dn->bsn", h, p["w_C"])[:, 0]
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,dh->bsh", h, p["w_dt"])[:, 0].astype(jnp.float32)
+            + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        hs, hp_ = cfg.n_ssm_heads, cfg.ssm_headdim
+        hn, y = ssm_mod.ssd_decode_step(cache["h"], xs.reshape(b, hs, hp_),
+                                        dt, A, B, C, p["D_skip"])
+        z = jnp.einsum("bsd,di->bsi", h, p["w_z"])[:, 0] if "w_z" in p else None
+        y = y.reshape(b, 1, -1)
+        if z is not None:
+            y = y * jax.nn.silu(z)[:, None]
+        y = rms_norm(y, p["ssm_norm"])
+        return jnp.einsum("bsi,id->bsd", y, p["out_proj"]), dict(cache, h=hn)
+
+    if spec.mixer == "mla":
+        # absorbed MLA decode: score against the compressed cache directly
+        nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        hH = cfg.n_heads
+        q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(b, 1, hH, nd + rd)
+        q_nope, q_rope = q[..., :nd], q[..., nd:]
+        posv = jnp.full((b, 1), pos)
+        q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+        dkv = jnp.einsum("bsd,dh->bsh", h, p["w_dkv"])
+        ckv_new = rms_norm(dkv[..., :cfg.kv_lora], p["kv_norm"])
+        kr_new = apply_rope(dkv[:, :, None, cfg.kv_lora:], posv,
+                            cfg.rope_theta)[:, :, 0]
+        if append:
+            ckv, kr = cache["ckv"], cache["kr"]
+            n_valid = pos
+        else:
+            ckv = cache_update(cache["ckv"], ckv_new, pos)
+            kr = cache_update(cache["kr"], kr_new, pos)
+            n_valid = pos + 1
+        # absorb W_uk into q: q' = q_nope @ W_uk^T  -> (B,H,lora)
+        w_uk = p["w_uk"].reshape(cfg.kv_lora, hH, nd)
+        q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_uk)
+        scores = (jnp.einsum("bhl,bsl->bhs", q_abs.astype(jnp.float32),
+                             ckv.astype(jnp.float32))
+                  + jnp.einsum("bhr,bsr->bhs",
+                               q_rope[:, 0].astype(jnp.float32),
+                               kr.astype(jnp.float32)))
+        valid = jnp.arange(ckv.shape[1])[None] < n_valid
+        scores = scores / math.sqrt(nd + rd)
+        scores = jnp.where(valid[:, None], scores, -1e30)
+        if append:
+            # two-part online softmax (no concat on the sharded seq axis)
+            s_new = (jnp.einsum("bhl,bsl->bhs", q_abs.astype(jnp.float32),
+                                ckv_new.astype(jnp.float32))
+                     + jnp.einsum("bhr,bsr->bhs",
+                                  q_rope[:, 0].astype(jnp.float32),
+                                  kr_new.astype(jnp.float32)))[..., 0]
+            s_new = s_new / math.sqrt(nd + rd)
+            m = jnp.maximum(scores.max(axis=-1), s_new)
+            p_cache = jnp.exp(scores - m[..., None])
+            p_new = jnp.exp(s_new - m)
+            denom = p_cache.sum(axis=-1) + p_new
+            ctx = jnp.einsum("bhs,bsl->bhl", p_cache,
+                             ckv.astype(jnp.float32))
+            ctx = (ctx + p_new[..., None]
+                   * ckv_new[:, 0, None, :].astype(jnp.float32))
+            ctx = ctx / denom[..., None]
+        else:
+            pr = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhs,bsl->bhl", pr,
+                             ckv.astype(jnp.float32))      # (B,H,lora)
+        w_uv = p["w_uv"].reshape(cfg.kv_lora, hH, vd)
+        out = jnp.einsum("bhl,lhd->bhd", ctx,
+                         w_uv.astype(jnp.float32)).astype(h.dtype)
+        y = jnp.einsum("bh,hd->bd", out.reshape(b, hH * vd),
+                       p["wo"])[:, None]
+        if append:
+            return y, dict(cache, ckv=ckv_new, kr=kr_new)
+        return y, dict(cache, ckv=ckv, kr=kr)
+
+    raise ValueError(spec.mixer)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                batch: Dict[str, jnp.ndarray], pos: jnp.ndarray):
+    """One token for every sequence in the batch.
+
+    batch: {"tokens": (B,1)} (+ positions3 for M-RoPE).
+    Returns (logits (B,1,V) fp32, new cache).
+    """
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions3 = batch.get("positions3")
+
+    new_pre = []
+    for p, spec, c in zip(params.get("pre", ()), cfg.pre,
+                          cache.get("pre", ())):
+        h = rms_norm(x, p["norm"])
+        y, nc = _decode_mixer(p, cfg, spec, h, c, pos, positions3)
+        x = x + y
+        y, has = mlp_block(p, cfg, spec, x)
+        if has:
+            x = x + y
+        new_pre.append(nc)
+
+    cross = cache.get("cross")
+    from .perfopts import current as _perf_current
+    cache_as_carry = _perf_current().decode_opt
+
+    def layer_apply(x, unit_p, unit_c, cross_kv):
+        new_c = {}
+        for i, spec in enumerate(cfg.unit):
+            p, c = unit_p[f"u{i}"], unit_c[f"u{i}"]
+            h = rms_norm(x, p["norm"])
+            y, nc = _decode_mixer(p, cfg, spec, h, c, pos, positions3)
+            x = x + y
+            new_c[f"u{i}"] = nc
+            if cfg.enc_dec and cross_kv is not None:
+                hc = rms_norm(x, p["cross_norm"])
+                q, _, _ = _qkv(p["cross"], cfg, hc)
+                out = decode_attention(q, cross_kv["k"], cross_kv["v"],
+                                       cross_kv["k"].shape[1],
+                                       AttnSpec(causal=False))
+                x = x + jnp.einsum("bsh,hd->bsd",
+                                   out.reshape(b, 1, -1), p["cross"]["wo"])
+            y, has = mlp_block(p, cfg, spec, x)
+            if has:
+                x = x + y
+        return x, new_c
+
+    if cache_as_carry:
+        # append-style decode: mixers read the (unmodified) cache plus
+        # the current token's K/V, and return only the small per-token
+        # updates as scan ys; the stacked cache is then written with ONE
+        # top-level in-place slice update per leaf.  The baseline scan
+        # instead rebuilds the full multi-GB stacked cache every layer
+        # (measured: the dominant HBM term of the decode baseline).
+        def body(x, xs):
+            unit_p, unit_c, cross_kv = xs
+            x, new_c = layer_apply(x, unit_p, unit_c, cross_kv)
+            return x, new_c
+
+        xs = (params["unit"], cache["unit"], cross)
+        x, updates = jax.lax.scan(body, x, xs)
+        new_unit = {}
+        for i, spec in enumerate(cfg.unit):
+            key = f"u{i}"
+            upd, cur = updates[key], cache["unit"][key]
+            out_c = {}
+            for name, stack_arr in cur.items():
+                u = upd[name]
+                if name == "h":                  # SSM state: full replace
+                    out_c[name] = u.astype(stack_arr.dtype)
+                    continue
+                cl = stack_arr.shape[2]
+                slot = pos if (spec.window is None or name in
+                               ("ckv", "kr")) else pos % cl
+                idx = (0, 0, slot) + (0,) * (stack_arr.ndim - 3)
+                out_c[name] = jax.lax.dynamic_update_slice(
+                    stack_arr, u.astype(stack_arr.dtype), idx)
+            new_unit[key] = out_c
+    else:
+        def body(x, xs):
+            unit_p, unit_c, cross_kv = xs
+            x, new_c = layer_apply(x, unit_p, unit_c, cross_kv)
+            return x, new_c
+
+        xs = (params["unit"], cache["unit"], cross)
+        x, new_unit = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_fn(params, cfg, x)
+    new_cache = dict(cache, unit=new_unit)
+    if new_pre:
+        new_cache["pre"] = tuple(new_pre)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            cache_len: Optional[int] = None):
+    """Run the full prompt, return (last-position logits, decode cache).
+
+    SSM/hybrid states are produced by running the recurrent form over the
+    prompt inside the same lowered computation (chunked scan reuse)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.vision_stub and "vision_embeds" in batch:
+        x = jax.lax.dynamic_update_slice(
+            x, batch["vision_embeds"].astype(cfg.dtype), (0, 0, 0))
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    positions3 = batch.get("positions3")
+
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+
+    new_pre = []
+    for p, spec in zip(params.get("pre", ()), cfg.pre):
+        xin = x
+        x, ce = layer_forward(p, cfg, spec, x, positions, positions3,
+                              enc_out, collect_cache=True,
+                              cache_len=_cache_seq_len(cfg, spec, cache_len))
+        new_pre.append(_prefill_ssm_state(p, cfg, spec, ce, xin))
+
+    def body(x, unit_p):
+        caches = {}
+        for i, spec in enumerate(cfg.unit):
+            xin = x
+            x, ce = layer_forward(unit_p[f"u{i}"], cfg, spec, x, positions,
+                                  positions3, enc_out, collect_cache=True,
+                                  cache_len=_cache_seq_len(cfg, spec,
+                                                           cache_len))
+            ce = _prefill_ssm_state(unit_p[f"u{i}"], cfg, spec, ce, xin)
+            caches[f"u{i}"] = ce
+            if cfg.enc_dec:
+                ck = jnp.einsum("bsd,dh->bsh", enc_out,
+                                unit_p[f"u{i}"]["cross"]["wk"])
+                cv = jnp.einsum("bsd,dh->bsh", enc_out,
+                                unit_p[f"u{i}"]["cross"]["wv"])
+                se = enc_out.shape[1]
+                caches["_cross"] = {
+                    "k": ck.reshape(b, se, cfg.n_kv_heads, cfg.head_dim),
+                    "v": cv.reshape(b, se, cfg.n_kv_heads, cfg.head_dim)}
+        return x, caches
+
+    x, unit_caches = jax.lax.scan(body, x, params["unit"])
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_fn(params, cfg, x[:, -1:])
+
+    cache: Params = {"unit": {k: v for k, v in unit_caches.items()
+                              if not k.startswith("_")}}
+    if cfg.enc_dec:
+        cache["cross"] = unit_caches["_cross"]
+    if new_pre:
+        cache["pre"] = tuple(new_pre)
+    return logits, cache
+
+
+def _prefill_ssm_state(p, cfg, spec, ce, xin):
+    """Attach the post-prompt SSM state to a prefill cache entry."""
+    if spec.mixer not in ("ssm", "hybrid"):
+        return ce
+    pp = p["ssm"] if spec.mixer == "hybrid" else p
+    h = rms_norm(xin, p["norm"])
+    b, s, _ = h.shape
+    hs, hp_ = cfg.n_ssm_heads, cfg.ssm_headdim
+    xs, B, C, dt, A = _ssm_inputs(pp, cfg, h)
+    state = _ssd_final_state(xs.reshape(b, s, hs, hp_), dt, A, B,
+                             cfg.ssm_chunk)
+    ce = dict(ce or {}, h=state)
+    return ce
+
+
+def _ssd_final_state(x, dt, A, B, chunk):
+    """Final SSM state after a prompt (for prefill->decode handoff)."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // q
+    xc = x.astype(jnp.float32).reshape(bt, nc, q, h, p)
+    dtc = dt.astype(jnp.float32).reshape(bt, nc, q, h)
+    Bc = B.astype(jnp.float32).reshape(bt, nc, q, n)
+    dtA = dtc * A.astype(jnp.float32)
+    cum = jnp.cumsum(dtA, axis=2)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, dtc * decay_to_end, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def step(hstate, inp):
+        st, dec = inp
+        return hstate * dec[..., None, None] + st, None
+
+    h0 = jnp.zeros((bt, h, p, n), jnp.float32)
+    hT, _ = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(states, 1, 0),
+                          jnp.moveaxis(chunk_decay, 1, 0)))
+    return hT

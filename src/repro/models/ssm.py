@@ -1,0 +1,140 @@
+"""Mamba2 SSD (state-space duality) blocks — chunked training scan and
+O(1)-state decode step.  Pure jnp + lax.scan (shardable; heads shard on
+the "model" mesh axis).
+
+Recurrence (per head h, head dim P, state N, shared B/C of one group):
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * (B_t outer x_t)
+    y_t = C_t . h_t + D * x_t
+
+Training uses the chunked SSD form: intra-chunk quadratic attention-like
+term + inter-chunk state recurrence (lax.scan over chunks), which keeps
+temp memory O(chunk^2) and the HLO small.
+
+Simplifications vs the reference implementation (recorded in DESIGN.md
+§3/§4): the short causal conv1d on x/B/C is omitted, and n_groups = 1.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(dtA: jnp.ndarray) -> jnp.ndarray:
+    """dtA: (..., Q) -> (..., Q, Q) lower-triangular pairwise decay sums:
+    out[t, s] = sum_{s < u <= t} dtA[u]  (for s <= t)."""
+    q = dtA.shape[-1]
+    cs = jnp.cumsum(dtA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., t, s)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+             chunk: int = 256) -> jnp.ndarray:
+    """Chunked SSD forward.
+
+    x:  (Bt, S, H, P)    inputs per head
+    dt: (Bt, S, H)       positive step sizes (post-softplus)
+    A:  (H,)             negative decay rates
+    B:  (Bt, S, N)       input projection to state (n_groups=1)
+    C:  (Bt, S, N)       state readout
+    D:  (H,)             skip
+    returns (Bt, S, H, P)
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # dt=0 on padding -> decay 1, zero state contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        out = ssd_scan(x, dt, A, B, C, D, chunk)
+        return out[:, :s]
+    nc = s // q
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    xc = xf.reshape(bt, nc, q, h, p)
+    dtc = dtf.reshape(bt, nc, q, h)
+    Bc = Bf.reshape(bt, nc, q, n)
+    Cc = Cf.reshape(bt, nc, q, n)
+    dtA = dtc * A.astype(jnp.float32)                    # (bt,nc,q,h)
+
+    # ---- intra-chunk (quadratic within the chunk) ----
+    Lmat = jnp.exp(segsum(jnp.moveaxis(dtA, -1, -2)))    # (bt,nc,h,q,q)
+    CB = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)           # (bt,nc,q,q)
+    W = CB[:, :, None] * Lmat                            # (bt,nc,h,q,q)
+    xdt = xc * dtc[..., None]                            # (bt,nc,q,h,p)
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", W, xdt)
+
+    # ---- chunk states ----
+    cum = jnp.cumsum(dtA, axis=2)                        # (bt,nc,q,h)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (bt,nc,q,h)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                        Bc, dtc * decay_to_end, xc)      # (bt,nc,h,p,n)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (bt,nc,h)
+
+    # ---- inter-chunk recurrence over chunks ----
+    def step(hstate, inp):
+        st, dec = inp                                    # (bt,h,p,n),(bt,h)
+        h_prev = hstate
+        hstate = h_prev * dec[..., None, None] + st
+        return hstate, h_prev
+
+    h0 = jnp.zeros((bt, h, p, n), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (bt,nc,h,p,n)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(cum)                              # (bt,nc,q,h)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", Cc, in_decay, h_prevs)
+
+    y = (y_intra + y_inter
+         + xf.reshape(bt, nc, q, h, p) * D.astype(jnp.float32)[:, None])
+    return y.reshape(bt, s, h, p).astype(x.dtype)
+
+
+def ssd_decode_step(hstate: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                    A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+                    D: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step.
+
+    hstate: (Bt, H, P, N); x: (Bt, H, P); dt: (Bt, H); B,C: (Bt, N).
+    Returns (new_state, y (Bt, H, P))."""
+    dtf = dt.astype(jnp.float32)
+    dec = jnp.exp(dtf * A.astype(jnp.float32))           # (Bt,H)
+    upd = jnp.einsum("bn,bh,bhp->bhpn", B.astype(jnp.float32), dtf,
+                     x.astype(jnp.float32))
+    hnew = hstate * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), hnew)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[:, None]
+    return hnew, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference (sequential) implementation for tests
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, A, B, C, D):
+    """O(S) sequential recurrence — the oracle for ssd_scan."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    hstate = jnp.zeros((bt, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        hstate, y = ssd_decode_step(hstate, x[:, t], dt[:, t], A,
+                                    B[:, t], C[:, t], D)
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(x.dtype)

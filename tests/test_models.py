@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward /
+train step, output shapes, no NaNs; prefill->decode consistency; SSD and
+blockwise-attention oracles (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.models import lm, ssm
+from repro.models.layers import AttnSpec, attention, decode_attention
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    if cfg.vision_stub:
+        batch["vision_embeds"] = jnp.ones(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16) * 0.1
+        batch["positions3"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S))
+    if cfg.enc_dec:
+        batch["enc_embeds"] = jnp.ones((B, 16, cfg.d_model),
+                                       jnp.bfloat16) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_forward_and_loss(name):
+    cfg = reduced(ARCHS[name])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    x = lm.forward(params, cfg, batch)
+    assert x.shape == (B, S, cfg.d_model)
+    assert not np.isnan(np.asarray(x, np.float32)).any()
+    loss = jax.jit(lambda p, b: lm.lm_loss(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss))
+    # one SGD-flavored step decreases nothing structurally — just check
+    # grads exist and are finite for every leaf
+    grads = jax.grad(lambda p: lm.lm_loss(p, cfg, batch, remat=False))(params)
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_prefill_decode_consistency(name):
+    cfg = dataclasses.replace(reduced(ARCHS[name]), dtype=jnp.float32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab)
+    fb = dict(_batch(cfg), tokens=toks)
+    if cfg.vision_stub:
+        fb["positions3"] = jnp.broadcast_to(jnp.arange(S + 1)[None, None],
+                                            (3, B, S + 1))
+    x = lm.forward(params, cfg, fb)
+    ref_logits = lm.logits_fn(params, cfg, x[:, S - 1:S + 1])
+
+    pb = dict(fb, tokens=toks[:, :S])
+    if cfg.vision_stub:
+        pb["positions3"] = fb["positions3"][:, :, :S]
+    lp, cache = lm.prefill(params, cfg, pb)
+    db = {"tokens": toks[:, S:S + 1]}
+    if cfg.mrope:
+        db["positions3"] = jnp.full((3, B, 1), S)
+    ld, cache2 = lm.decode_step(params, cfg, cache, db, jnp.int32(S))
+
+    scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+    assert float(jnp.max(jnp.abs(lp[:, 0] - ref_logits[:, 0]))) / scale < 2e-2
+    assert float(jnp.max(jnp.abs(ld[:, 0] - ref_logits[:, 1]))) / scale < 5e-2
+    # greedy tokens agree
+    np.testing.assert_array_equal(np.argmax(np.asarray(ld[:, 0]), -1),
+                                  np.argmax(np.asarray(ref_logits[:, 1]), -1))
+    # cache structure is stable across steps
+    jax.tree.map(lambda a, b: None if a.shape == b.shape else
+                 pytest.fail("cache shape changed"), cache, cache2)
+
+
+def _naive_attention(q, k, v, spec):
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    if spec.logit_softcap:
+        s = jnp.tanh(s / spec.logit_softcap) * spec.logit_softcap
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((sq, k.shape[1]), bool)
+    if spec.causal:
+        m &= kp <= qp
+    if spec.window is not None:
+        m &= kp > qp - spec.window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(3, 65), hq=st.sampled_from([2, 4]),
+       ratio=st.sampled_from([1, 2]), window=st.sampled_from([None, 5, 16]),
+       cap=st.sampled_from([None, 20.0]), causal=st.booleans())
+def test_blockwise_attention_matches_naive(s, hq, ratio, window, cap, causal):
+    rng = np.random.default_rng(s * 7 + hq)
+    hkv = hq // ratio
+    d = 8
+    q = jnp.asarray(rng.normal(size=(2, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, s, hkv, d)), jnp.float32)
+    spec = AttnSpec(causal=causal, window=window, logit_softcap=cap,
+                    q_block=16, kv_block=16)
+    out = attention(q, k, v, spec)
+    ref = _naive_attention(q, k, v, spec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 80), h=st.sampled_from([1, 4]),
+       chunk=st.sampled_from([8, 16, 32]))
+def test_ssd_chunked_matches_sequential(s, h, chunk):
+    rng = np.random.default_rng(s * 13 + h)
+    p, n, bt = 4, 8, 2
+    x = jnp.asarray(rng.normal(size=(bt, s, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.normal(size=(bt, s, h)), jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(h,)) * 0.3, jnp.float32))
+    Bm = jnp.asarray(rng.normal(size=(bt, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(bt, s, n)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+    y1 = ssm.ssd_scan(x, dt, A, Bm, C, D, chunk=chunk)
+    y2 = ssm.ssd_reference(x, dt, A, Bm, C, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_decode_attention_matches_blockwise_last_row():
+    rng = np.random.default_rng(0)
+    s, hq, hkv, d = 33, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(2, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, s, hkv, d)), jnp.float32)
+    spec = AttnSpec(causal=True, logit_softcap=50.0)
+    full = attention(q, k, v, spec)
+    dec = decode_attention(q[:, -1:], k, v, jnp.int32(s), spec)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                               atol=1e-5, rtol=1e-5)
