@@ -1,6 +1,7 @@
 """Shared helpers for the CIM benchmark scripts."""
 from __future__ import annotations
 
+import os
 import sys
 import time
 from pathlib import Path
@@ -9,8 +10,17 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cimsim import perf                                   # noqa: E402
 from repro.core import baselines, compiler                      # noqa: E402
-from repro.core.abstraction import get_arch                     # noqa: E402
-from repro.workloads import get_workload                        # noqa: E402
+from repro.core.abstraction import get_arch                     # noqa: E402,F401
+from repro.workloads import get_workload                        # noqa: E402,F401
+
+#: REPRO_BENCH_SMOKE=1 trims every section to its cheapest workloads so
+#: CI can exercise the whole benchmark harness under a small budget.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "").lower() not in ("", "0", "false")
+
+
+def smoke_subset(workloads, keep: int = 1):
+    """First ``keep`` workloads under the smoke budget, all otherwise."""
+    return tuple(workloads)[:keep] if SMOKE else tuple(workloads)
 
 
 def run_policy(workload, arch, policy: str, level=None):

@@ -11,16 +11,19 @@ Poly-Schedule comparison.
 """
 from __future__ import annotations
 
-from cim_common import get_arch, run_policy
+from cim_common import SMOKE, get_arch, run_policy, smoke_subset
+
+# the smoke budget swaps the big VGG for its 7-layer cousin
+WL_BIG = "vgg7" if SMOKE else "vgg16"
 
 
 def rows():
     out = []
     # (a) Jia et al.
     arch = get_arch("jia-issc21")
-    nat = run_policy("vgg16", arch, "native")
-    ours = run_policy("vgg16", arch, "ours")
-    pipe = run_policy("vgg16", arch, "cg_pipe")
+    nat = run_policy(WL_BIG, arch, "native")
+    ours = run_policy(WL_BIG, arch, "ours")
+    pipe = run_policy(WL_BIG, arch, "cg_pipe")
     out.append(("fig20a_jia_speedup_pd", nat.latency_cycles / ours.latency_cycles,
                 "paper 3.7x"))
     out.append(("fig20a_jia_speedup_pipeline_only",
@@ -28,8 +31,8 @@ def rows():
 
     # (b) PUMA peak power
     arch = get_arch("puma")
-    nat = run_policy("vgg16", arch, "native")
-    ours = run_policy("vgg16", arch, "ours")
+    nat = run_policy(WL_BIG, arch, "native")
+    ours = run_policy(WL_BIG, arch, "ours")
     out.append(("fig20b_puma_peak_power_reduction_pct",
                 100 * (1 - ours.peak_active_xbs / nat.peak_active_xbs),
                 "paper 75%"))
@@ -51,7 +54,7 @@ def rows():
 
     # (d) Poly-Schedule on the ISAAC-like baseline
     arch = get_arch("isaac-baseline")
-    for wl in ("vgg16", "resnet18", "resnet50", "vit"):
+    for wl in smoke_subset(("resnet18", "vgg16", "resnet50", "vit"), keep=1):
         noopt = run_policy(wl, arch, "no_opt")
         poly = run_policy(wl, arch, "poly")
         ours = run_policy(wl, arch, "ours")

@@ -9,7 +9,7 @@ ResNet series.
 """
 from __future__ import annotations
 
-from cim_common import get_arch, run_policy
+from cim_common import get_arch, run_policy, smoke_subset
 
 NETS = ("resnet18", "resnet34", "resnet50", "resnet101")
 
@@ -17,7 +17,7 @@ NETS = ("resnet18", "resnet34", "resnet50", "resnet101")
 def rows():
     arch = get_arch("isaac-baseline")
     out = []
-    for wl in NETS:
+    for wl in smoke_subset(NETS):
         noopt = run_policy(wl, arch, "no_opt")
         pipe = run_policy(wl, arch, "cg_pipe")
         dup = run_policy(wl, arch, "cg_dup")

@@ -8,7 +8,7 @@ variant of the Table-3 baseline).
 """
 from __future__ import annotations
 
-from cim_common import get_arch, run_policy
+from cim_common import get_arch, run_policy, smoke_subset
 from repro.core.abstraction import ChipTier, CoreTier, CrossbarTier
 
 
@@ -34,19 +34,19 @@ def _levels(arch):
 
 def rows():
     out = []
-    for n in (256, 512, 1024):
+    for n in smoke_subset((256, 512, 1024)):
         s = _levels(_variant(core_number=(n // 16, 16)))
         for lvl, x in s.items():
             out.append((f"fig22a_cores{n}_{lvl}_x", x, ""))
-    for xbs in (2, 4, 8):
+    for xbs in smoke_subset((2, 4, 8)):
         s = _levels(_variant(xb_number=(xbs, 1)))
         for lvl, x in s.items():
             out.append((f"fig22b_xbs{xbs}_{lvl}_x", x, ""))
-    for size in ((64, 512), (128, 256), (256, 128), (512, 64)):
+    for size in smoke_subset(((64, 512), (128, 256), (256, 128), (512, 64))):
         s = _levels(_variant(xb_size=size))
         for lvl, x in s.items():
             out.append((f"fig22c_xb{size[0]}x{size[1]}_{lvl}_x", x, ""))
-    for pr in (8, 16, 32, 128):
+    for pr in smoke_subset((8, 16, 32, 128)):
         s = _levels(_variant(parallel_row=pr))
         out.append((f"fig22d_pr{pr}_vvm_over_mvm_x",
                     s["WLM"] / s["XBM"], "paper ~1.2x at pr=8"))

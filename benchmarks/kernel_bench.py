@@ -7,7 +7,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from cim_common import timed
+from cim_common import smoke_subset
 from repro.kernels.cim_mvm import cim_mvm, CimMvmParams
 
 
@@ -15,7 +15,7 @@ def rows():
     out = []
     p = CimMvmParams(8, 8, 1, 2, 8, 8)
     rng = np.random.default_rng(0)
-    for (m, r, c) in ((64, 128, 128), (128, 1152, 256)):
+    for (m, r, c) in smoke_subset(((64, 128, 128), (128, 1152, 256))):
         x = jnp.asarray(rng.integers(0, 256, (m, r)), jnp.int32)
         w = jnp.asarray(rng.integers(0, 256, (r, c)), jnp.int32)
         for use_kernel, tag in ((True, "pallas_interpret"), (False, "oracle")):

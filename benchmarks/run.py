@@ -11,6 +11,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 
 def main() -> None:
+    import dse_sweep
     import fig20_generality
     import fig21_ablation
     import fig22_sensitivity
@@ -23,6 +24,7 @@ def main() -> None:
         ("fig21 (ResNet multi-level ablation)", fig21_ablation.rows),
         ("fig22 (architecture sensitivity, ViT)", fig22_sensitivity.rows),
         ("kernels (cim_mvm)", kernel_bench.rows),
+        ("dse (cross-tier sweep + compile cache)", dse_sweep.rows),
     ]
     print("name,value,note")
     for title, fn in sections:

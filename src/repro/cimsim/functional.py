@@ -29,10 +29,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.abstraction import CIMArch, ComputingMode
+from ..core.abstraction import CIMArch
 from ..core.cg_opt import OpPlacement, SchedulePlan
 from ..core.graph import Graph, Node, weight_matrix_shape
-from ..core.mapping import logical_cols_per_xb, row_tile_rows
+from ..core.mapping import logical_cols_per_xb
 from ..core.mop import MetaOp, Program
 from ..kernels.cim_mvm import cim_mvm_params, CimMvmParams
 from ..kernels.cim_mvm import ref as kref
@@ -148,6 +148,10 @@ def apply_dcom(node: Node, xs: List[np.ndarray], graph: Graph,
         return xs[0].transpose(node.attrs["perm"])
     if t == "Concat":
         return np.concatenate(xs, axis=node.attrs.get("axis", -1))
+    if t == "Split":
+        axis = node.attrs.get("axis", -1) % xs[0].ndim
+        parts = node.attrs["parts"]
+        return np.split(xs[0], np.cumsum(parts[:-1]), axis=axis)
     if t == "MatMul":
         b = xs[1].T if node.attrs.get("transpose_b") else xs[1]
         y = xs[0].astype(np.int64) @ b.astype(np.int64)
@@ -223,9 +227,19 @@ def reference_forward(graph: Graph, weights: Dict[str, np.ndarray],
                 y = y[0] if xs[0].ndim == 1 else y
             tensors[node.outputs[0]] = y
         else:
-            tensors[node.outputs[0]] = apply_dcom(node, xs, graph, shifts,
-                                                  calibrating)
+            _store_outputs(tensors, node,
+                           apply_dcom(node, xs, graph, shifts, calibrating))
     return tensors, shifts
+
+
+def _store_outputs(tensors: Dict[str, np.ndarray], node: Node, y) -> None:
+    """Assign a DCOM result to the node's output tensors (Split is the
+    one multi-output operator: apply_dcom returns one array per part)."""
+    if node.op_type == "Split":
+        for name, part in zip(node.outputs, y):
+            tensors[name] = part
+    else:
+        tensors[node.outputs[0]] = y
 
 
 # ---------------------------------------------------------------------------
@@ -373,10 +387,8 @@ class FunctionalSimulator:
         if node is None:
             return
         xs = [self._tensor(t) for t in node.inputs]
-        self._tensors[node.outputs[0]] = apply_dcom(
-            node, xs, self.graph, self.shifts, calibrating=False)
-        if node.op_type == "Split":
-            raise NotImplementedError("Split in functional sim")
+        y = apply_dcom(node, xs, self.graph, self.shifts, calibrating=False)
+        _store_outputs(self._tensors, node, y)
 
     def _acc_for(self, node: Node) -> np.ndarray:
         if node.name not in self._acc:

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from ..core.abstraction import CIMArch
 from ..core.cg_opt import OpPlacement, SchedulePlan
@@ -53,6 +53,18 @@ class PerfReport:
     pipeline: bool
     stagger: bool
     remap: bool
+    crossbars_used: int = 0        # peak physical crossbars mapped (any segment)
+
+    def metrics(self) -> Dict[str, float]:
+        """JSON-safe flat metric bundle (DSE objectives + diagnostics).
+
+        Every value is a plain int/float/bool so the bundle can be stored
+        next to a compile-cache entry and re-read without unpickling the
+        full ``CompileResult``.
+        """
+        d = dataclasses.asdict(self)
+        return {k: (v if isinstance(v, (bool, int)) else float(v))
+                for k, v in d.items()}
 
 
 @dataclasses.dataclass
@@ -252,6 +264,11 @@ def estimate(plan: SchedulePlan) -> PerfReport:
         cur += delta
         peak = max(peak, cur)
 
+    # crossbars physically occupied: segments execute serially and reuse
+    # (overwrite) the pool, so the footprint is the busiest segment's.
+    xbs_used = max((sum(p.dup * p.mapping.n_xbs for p in seg.placements)
+                    for seg in plan.segments), default=0)
+
     return PerfReport(
         latency_cycles=latency,
         compute_cycles=compute,
@@ -265,4 +282,5 @@ def estimate(plan: SchedulePlan) -> PerfReport:
         pipeline=pipeline,
         stagger=stagger,
         remap=plan.vvm_remap,
+        crossbars_used=xbs_used,
     )

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from .base import LayerSpec, ModelConfig, ShapeSpec, SHAPES, shapes_for
+from .base import (LayerSpec, ModelConfig, ShapeSpec, SHAPES,  # noqa: F401
+                   shapes_for)
 
 from . import (gemma2_2b, minitron_4b, starcoder2_15b, qwen1_5_4b,
                mamba2_780m, hymba_1_5b, mixtral_8x7b, deepseek_v2_lite_16b,

@@ -187,6 +187,23 @@ class CIMArch:
     def replace(self, **kw) -> "CIMArch":
         return dataclasses.replace(self, **kw)
 
+    # ---- stable serialization (compile-cache keys, sweep manifests) ----
+    def to_dict(self) -> dict:
+        """JSON-safe, order-stable description of the full Abs-arch +
+        Abs-com configuration.  Two archs with equal ``to_dict()`` compile
+        identically, so this is the arch half of a compile-cache key."""
+        d = dataclasses.asdict(self)
+        d["mode"] = self.mode.value
+        d["xb"]["cell_type"] = self.xb.cell_type.value
+        return d
+
+    def fingerprint(self) -> str:
+        """Stable hex digest of ``to_dict()`` (content-addressed caching)."""
+        import hashlib
+        import json
+        blob = json.dumps(self.to_dict(), sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
 
 # ---------------------------------------------------------------------------
 # Presets from the paper's evaluation section.

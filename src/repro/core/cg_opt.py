@@ -26,7 +26,8 @@ from typing import Dict, List, Optional, Tuple
 
 from .abstraction import CIMArch, ComputingMode
 from .graph import Graph, Node, n_mvm, out_elems, weight_matrix_shape
-from .mapping import BitBinding, VXBMapping, bind, cores_per_copy
+from .mapping import (BitBinding, VXBMapping, bind, cores_per_copy,
+                      logical_cols_per_xb)
 
 
 # ---------------------------------------------------------------------------
@@ -323,35 +324,45 @@ def run(graph: Graph, arch: CIMArch, *, use_pipeline: bool = True,
             pls.append(p0)
             continue
         r, c = weight_matrix_shape(node)
-        xb = arch.xb
         slot_cap = budget * arch.core.n_xbs      # crossbars on the chip
         full = bind((r, c), arch, binding)
-        grid_r_full, grid_c_full = full.grid_r, full.grid_c
+        grid_r_full = full.grid_r
+        # Column capacity is counted in VXB column *units* so a chunk
+        # boundary never splits the bit slices of one logical column
+        # (B->XB: one unit = col_slices crossbars; B->XBC: one crossbar).
+        xbs_per_unit = full.xbs_per_vxb
+        cols_per_unit = logical_cols_per_xb(full, arch)
+        units_c_full = math.ceil(c / cols_per_unit)
+        if slot_cap < xbs_per_unit:
+            raise ValueError(
+                f"{node.name}: one VXB column unit spans {xbs_per_unit} "
+                f"crossbars but the chip offers only {slot_cap}")
         # search the (row-chunks x col-chunks) grid minimizing the total
         # chunk count (serial reload generations), subject to one chunk
         # fitting the chip; ties prefer bigger chunks (better packing)
         best = None
-        rc_lo = max(1, math.ceil(grid_r_full / slot_cap))
+        rc_lo = max(1, math.ceil(grid_r_full / (slot_cap // xbs_per_unit)))
         rc_hi = rc_lo if naive_chunking else grid_r_full
         for rc in range(rc_lo, rc_hi + 1):
             grid_r_chunk = math.ceil(grid_r_full / rc)
-            col_cap = slot_cap // grid_r_chunk
+            col_cap = slot_cap // (grid_r_chunk * xbs_per_unit)
             if col_cap < 1:
                 continue
-            grid_c_chunk = min(col_cap, grid_c_full)
-            cc = math.ceil(grid_c_full / grid_c_chunk)
-            cores = math.ceil(grid_r_chunk * grid_c_chunk / arch.core.n_xbs)
+            units_c_chunk = min(col_cap, units_c_full)
+            cc = math.ceil(units_c_full / units_c_chunk)
+            chunk_xbs = grid_r_chunk * units_c_chunk * xbs_per_unit
+            cores = math.ceil(chunk_xbs / arch.core.n_xbs)
             if cores > budget:
                 continue
-            key = (rc * cc, -grid_r_chunk * grid_c_chunk)
+            key = (rc * cc, -chunk_xbs)
             if best is None or key < best[0]:
-                best = (key, rc, cc)
+                best = (key, rc, cc, units_c_chunk)
             if grid_r_chunk == 1:
                 break   # further row splits cannot reduce the chunk count
         assert best is not None, f"no feasible chunking for {node.name}"
-        _, rc, cc = best
+        _, rc, cc, units_c_chunk = best
         sub_r = math.ceil(r / rc)
-        sub_c = math.ceil(c / cc)
+        sub_c = min(c, units_c_chunk * cols_per_unit)
         n_chunks = rc * cc
         for ch in range(n_chunks):
             pls.append(cm.placement(node, graph, chunk=ch, n_chunks=n_chunks,

@@ -18,7 +18,7 @@ functional simulator can interpret the flow.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from .abstraction import CIMArch, ComputingMode
 from .cg_opt import OpPlacement, SchedulePlan

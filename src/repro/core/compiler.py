@@ -13,6 +13,8 @@ ablation arms of §4.3 (e.g. evaluate CG-only on a WLM-capable chip).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Optional, Union
 
 from . import cg_opt, codegen, mvm_opt, vvm_opt
@@ -36,6 +38,69 @@ class CompileResult:
         from ..cimsim import perf
         return dataclasses.asdict(perf.estimate(self.plan))
 
+    def metrics(self) -> dict:
+        """JSON-safe metric bundle (the DSE objective vector lives here)."""
+        from ..cimsim import perf
+        return perf.estimate(self.plan).metrics()
+
+
+# ---------------------------------------------------------------------------
+# Compile cache hook.
+#
+# ``compile_graph`` consults an (optional) cache object with the duck-typed
+# interface ``get(key) -> Optional[CompileResult]`` / ``put(key, result)``
+# (dse.cache.CompileCache is the disk-backed implementation).  The key is a
+# content hash of everything that determines the output: the graph structure,
+# the full Abs-arch description and every scheduling knob.
+# ---------------------------------------------------------------------------
+
+#: bump when compiler passes change in ways that alter emitted programs,
+#: so stale cache entries from older code can never be returned.
+COMPILE_KEY_SCHEMA = 1
+
+_COMPILE_CACHE = None
+
+
+def set_compile_cache(cache):
+    """Install a process-wide default compile cache; returns the previous
+    one (``None`` to disable).  Explicit ``compile_graph(..., cache=...)``
+    arguments take precedence."""
+    global _COMPILE_CACHE
+    prev, _COMPILE_CACHE = _COMPILE_CACHE, cache
+    return prev
+
+
+def get_compile_cache():
+    return _COMPILE_CACHE
+
+
+def compile_key(
+    graph: Graph,
+    arch: CIMArch,
+    *,
+    level: Optional[Union[str, ComputingMode]] = None,
+    use_pipeline: bool = True,
+    use_duplication: bool = True,
+    binding: BitBinding = BitBinding.B_TO_XBC,
+    expand: bool = False,
+) -> str:
+    """Stable content hash of one (graph, arch, knobs) compile config."""
+    if isinstance(level, str):
+        level = ComputingMode(level)
+    level = level or arch.mode
+    payload = {
+        "schema": COMPILE_KEY_SCHEMA,
+        "graph": graph.to_dict(),
+        "arch": arch.to_dict(),
+        "level": level.value,
+        "use_pipeline": bool(use_pipeline),
+        "use_duplication": bool(use_duplication),
+        "binding": binding.value,
+        "expand": bool(expand),
+    }
+    blob = json.dumps(payload, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
 
 def compile_graph(
     graph: Graph,
@@ -46,8 +111,15 @@ def compile_graph(
     use_duplication: bool = True,
     binding: BitBinding = BitBinding.B_TO_XBC,
     expand: bool = False,
+    cache=None,
 ) -> CompileResult:
-    """Compile ``graph`` for ``arch`` and emit the meta-operator flow."""
+    """Compile ``graph`` for ``arch`` and emit the meta-operator flow.
+
+    ``cache`` (or a process-wide default installed via
+    ``set_compile_cache``) short-circuits recompiles of identical
+    configurations; a hit returns the cached ``CompileResult`` — note its
+    ``plan.graph`` is the cache's own copy, not the ``graph`` argument.
+    """
     if isinstance(level, str):
         level = ComputingMode(level)
     level = level or arch.mode
@@ -55,6 +127,16 @@ def compile_graph(
         raise ValueError(
             f"chip {arch.name} (mode {arch.mode.value}) does not expose the "
             f"{level.value} interface")
+
+    cache = cache if cache is not None else _COMPILE_CACHE
+    key = None
+    if cache is not None:
+        key = compile_key(graph, arch, level=level, use_pipeline=use_pipeline,
+                          use_duplication=use_duplication, binding=binding,
+                          expand=expand)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
 
     def build(ping_pong: bool) -> SchedulePlan:
         plan = cg_opt.run(graph, arch, use_pipeline=use_pipeline,
@@ -73,12 +155,19 @@ def compile_graph(
         # (ping-pong) scheduling that hides rewrites behind compute at the
         # price of half the compute pool per segment.
         from ..cimsim import perf
-        alt = build(ping_pong=True)
-        if perf.estimate(alt).latency_cycles < perf.estimate(plan).latency_cycles:
+        try:
+            alt = build(ping_pong=True)
+        except ValueError:
+            alt = None   # half the pool cannot hold one placement chunk
+        if alt is not None and \
+                perf.estimate(alt).latency_cycles < perf.estimate(plan).latency_cycles:
             plan = alt
         else:  # rebuild to restore node.sched annotations of the winner
             plan = build(ping_pong=False)
 
     program = codegen.emit(plan, expand=expand)
     program.validate()
-    return CompileResult(plan=plan, program=program)
+    result = CompileResult(plan=plan, program=program)
+    if cache is not None:
+        cache.put(key, result)
+    return result

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 # Operator taxonomy ---------------------------------------------------------
 # CIM-supported operators are weight-stationary matmul-family ops that map

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import List, Tuple
+from typing import List
 
 from .abstraction import CIMArch
 from .graph import Node, weight_matrix_shape

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import Counter
-from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Union
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
 MOP_CM = {"cim.read_core"}
 MOP_XBM = {"cim.read_xb", "cim.write_xb"}

@@ -1,0 +1,26 @@
+"""Design-space exploration over the cross-tier scheduling knob space.
+
+CIM-MLC exposes a "tractable yet effective design space" (§4.3-§4.4): the
+scheduling level (CM/XBM/WLM, clamped to what the chip's computing mode
+allows), the bit-dimension binding (B->XBC vs B->XB), the CG pipeline and
+duplication switches, and the Abs-arch parameters themselves (crossbar
+geometry, cell precision, parallel rows, core counts).  This package
+turns the one-shot compiler into a search service:
+
+  * ``space``   — enumerate valid ``DesignPoint``s of a ``DesignSpace``;
+  * ``cache``   — content-addressed, disk-persisted compile cache;
+  * ``runner``  — sweep points concurrently through ``compile_graph`` +
+                  ``cimsim.perf.estimate``;
+  * ``pareto``  — Pareto frontier over (latency, peak power, crossbars).
+"""
+from .cache import CompileCache, default_cache_dir
+from .pareto import DEFAULT_OBJECTIVES, dominates, pareto_frontier
+from .runner import SweepResult, evaluate_point, sweep
+from .space import DesignPoint, DesignSpace, apply_arch_overrides
+
+__all__ = [
+    "CompileCache", "default_cache_dir",
+    "DEFAULT_OBJECTIVES", "dominates", "pareto_frontier",
+    "SweepResult", "evaluate_point", "sweep",
+    "DesignPoint", "DesignSpace", "apply_arch_overrides",
+]

@@ -1,0 +1,154 @@
+"""Content-addressed compile cache.
+
+Entries are keyed by ``core.compiler.compile_key`` — a SHA-256 over the
+graph structure, the full Abs-arch description and every scheduling knob
+— so a key can only ever map to one compilation output.  Each entry is
+two files under ``<root>/v<schema>/<key[:2]>/``:
+
+  * ``<key>.pkl``   — the pickled ``CompileResult`` (plan + program);
+  * ``<key>.json``  — the small ``PerfReport.metrics()`` bundle, so sweep
+    re-runs score cached points without unpickling multi-MB plans.
+
+Writes are atomic (tempfile + ``os.replace``), which makes the cache safe
+under the sweep runner's process pool.  Invalidation is by construction:
+changing the graph, the arch, any knob, or ``COMPILE_KEY_SCHEMA`` (bumped
+when compiler passes change behaviour) changes the key; stale entries are
+simply never addressed again.  ``clear()`` removes the directory tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import tempfile
+from pathlib import Path
+from typing import Dict, Optional
+
+from ..core.compiler import COMPILE_KEY_SCHEMA, CompileResult
+
+#: environment override for the on-disk cache location
+CACHE_DIR_ENV = "REPRO_COMPILE_CACHE_DIR"
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get(CACHE_DIR_ENV)
+    if env:
+        return Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME", os.path.expanduser("~/.cache"))
+    return Path(xdg) / "repro-cim-mlc" / "compile"
+
+
+class CompileCache:
+    """Disk-backed compile cache with an in-process memory layer.
+
+    The memory layer serves repeated compiles inside one process without
+    touching disk; ``memory=False`` disables it (useful for measuring the
+    disk path, and for workers that should not grow resident memory).
+    """
+
+    def __init__(self, root=None, memory: bool = True):
+        self.root = Path(root) if root is not None else default_cache_dir()
+        self._mem: Optional[Dict[str, CompileResult]] = {} if memory else None
+        self._mem_metrics: Dict[str, Dict] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # -- paths ------------------------------------------------------------
+    def _dir(self, key: str) -> Path:
+        return self.root / f"v{COMPILE_KEY_SCHEMA}" / key[:2]
+
+    def _pkl(self, key: str) -> Path:
+        return self._dir(key) / f"{key}.pkl"
+
+    def _json(self, key: str) -> Path:
+        return self._dir(key) / f"{key}.json"
+
+    # -- lookups ----------------------------------------------------------
+    def get(self, key: str) -> Optional[CompileResult]:
+        """Full ``CompileResult`` for ``key``, or None."""
+        if self._mem is not None and key in self._mem:
+            self.hits += 1
+            return self._mem[key]
+        path = self._pkl(key)
+        try:
+            with open(path, "rb") as f:
+                result = pickle.load(f)
+        except Exception:
+            # missing file, truncated write, or a stale entry whose classes
+            # changed shape under it (AttributeError/ImportError from
+            # pickle): all degrade to a recompute, never an abort
+            self.misses += 1
+            return None
+        self.hits += 1
+        if self._mem is not None:
+            self._mem[key] = result
+        return result
+
+    def get_metrics(self, key: str) -> Optional[Dict]:
+        """Metric bundle only — the cheap warm-sweep path (no unpickling)."""
+        if key in self._mem_metrics:
+            self.hits += 1
+            return dict(self._mem_metrics[key])
+        try:
+            with open(self._json(key)) as f:
+                metrics = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._mem_metrics[key] = metrics
+        return dict(metrics)
+
+    def contains(self, key: str) -> bool:
+        if self._mem is not None and key in self._mem:
+            return True
+        return self._pkl(key).exists()
+
+    # -- stores -----------------------------------------------------------
+    def put(self, key: str, result: CompileResult,
+            metrics: Optional[Dict] = None) -> None:
+        if metrics is None:
+            metrics = result.metrics()
+        self._dir(key).mkdir(parents=True, exist_ok=True)
+        _atomic_write(self._pkl(key),
+                      pickle.dumps(result, pickle.HIGHEST_PROTOCOL))
+        _atomic_write(self._json(key),
+                      json.dumps(metrics, sort_keys=True).encode())
+        if self._mem is not None:
+            self._mem[key] = result
+        self._mem_metrics[key] = metrics
+
+    # -- maintenance ------------------------------------------------------
+    def drop_memory(self) -> None:
+        """Forget the in-process layer (keeps disk entries)."""
+        if self._mem is not None:
+            self._mem.clear()
+        self._mem_metrics.clear()
+
+    def clear(self) -> None:
+        """Delete every entry of the current schema from disk + memory."""
+        import shutil
+        self.drop_memory()
+        shutil.rmtree(self.root / f"v{COMPILE_KEY_SCHEMA}",
+                      ignore_errors=True)
+
+    def stats(self) -> Dict[str, int]:
+        disk = 0
+        base = self.root / f"v{COMPILE_KEY_SCHEMA}"
+        if base.exists():
+            disk = sum(1 for _ in base.glob("*/*.pkl"))
+        return {"hits": self.hits, "misses": self.misses, "disk_entries": disk}
+
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise

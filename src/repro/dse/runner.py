@@ -1,0 +1,120 @@
+"""Sweep executor: compile + score every design point, cached, parallel.
+
+Each point is independent, so the runner farms them out to a process
+pool (``workers > 1``); results are re-ordered by point index, so the
+outcome is bit-identical for any worker count.  Scoring a point:
+
+  1. compute its ``compile_key``;
+  2. warm path — the cache's *metrics* file answers without unpickling;
+  3. cold path — ``compile_graph`` (which itself consults the cache for
+     the full result) then ``perf.estimate``; the entry is persisted.
+
+A point whose compilation raises (e.g. an arch override too small to
+hold any chunk of the model) is reported with ``error`` set rather than
+aborting the sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core import compiler
+from ..core.abstraction import CIMArch
+from ..core.graph import Graph
+from .cache import CompileCache
+from .space import DesignPoint, DesignSpace
+
+
+@dataclasses.dataclass
+class SweepResult:
+    index: int
+    point: DesignPoint
+    metrics: Optional[Dict[str, float]]
+    cached: bool = False
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None and self.metrics is not None
+
+
+def evaluate_point(graph: Graph, base_arch: CIMArch, point: DesignPoint,
+                   cache: Optional[CompileCache] = None,
+                   ) -> Tuple[Dict[str, float], bool]:
+    """(metrics, was_cached) for one design point."""
+    arch = point.arch_for(base_arch)
+    kwargs = point.compile_kwargs()
+    if cache is not None:
+        key = compiler.compile_key(graph, arch, **kwargs)
+        metrics = cache.get_metrics(key)
+        if metrics is not None:
+            return metrics, True
+    result = compiler.compile_graph(graph, arch, cache=cache, **kwargs)
+    return result.metrics(), False
+
+
+def _eval_one(args) -> SweepResult:
+    index, graph, base_arch, point, cache_dir = args
+    cache = CompileCache(cache_dir, memory=False) if cache_dir else None
+    try:
+        metrics, cached = evaluate_point(graph, base_arch, point, cache)
+        return SweepResult(index=index, point=point, metrics=metrics,
+                           cached=cached)
+    except Exception as e:  # infeasible point: report, don't abort the sweep
+        return SweepResult(index=index, point=point, metrics=None,
+                           error=f"{type(e).__name__}: {e}")
+
+
+def sweep(graph: Graph,
+          space: Union[DesignSpace, Sequence[DesignPoint]],
+          base_arch: Optional[CIMArch] = None,
+          cache: Optional[CompileCache] = None,
+          workers: int = 1) -> List[SweepResult]:
+    """Evaluate every point of ``space`` on ``graph``.
+
+    ``space`` is a ``DesignSpace`` (its ``arch`` is the base) or an
+    explicit point list plus ``base_arch``.  ``cache=None`` disables
+    caching; ``workers`` > 1 uses a process pool (each worker re-opens
+    the cache directory; entries are written atomically).
+    """
+    if isinstance(space, DesignSpace):
+        points = space.points()
+        base_arch = base_arch or space.arch
+    else:
+        points = list(space)
+        if base_arch is None:
+            raise ValueError("base_arch is required with an explicit "
+                             "point list")
+
+    if workers <= 1 or len(points) <= 1:
+        return [_eval_one((i, graph, base_arch, p, None))
+                if cache is None else _eval_one_local(i, graph, base_arch,
+                                                      p, cache)
+                for i, p in enumerate(points)]
+
+    cache_dir = str(cache.root) if cache is not None else None
+    jobs = [(i, graph, base_arch, p, cache_dir)
+            for i, p in enumerate(points)]
+    try:
+        from concurrent.futures import ProcessPoolExecutor
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            results = list(pool.map(_eval_one, jobs, chunksize=1))
+    except (OSError, ImportError):   # no process support: degrade serially
+        results = [_eval_one(j) for j in jobs]
+    results.sort(key=lambda r: r.index)
+    if cache is not None:
+        # surface freshly-written entries to the caller's cache layer
+        cache.drop_memory()
+    return results
+
+
+def _eval_one_local(index: int, graph: Graph, base_arch: CIMArch,
+                    point: DesignPoint, cache: CompileCache) -> SweepResult:
+    """Serial path reusing the caller's cache object (memory layer live)."""
+    try:
+        metrics, cached = evaluate_point(graph, base_arch, point, cache)
+        return SweepResult(index=index, point=point, metrics=metrics,
+                           cached=cached)
+    except Exception as e:
+        return SweepResult(index=index, point=point, metrics=None,
+                           error=f"{type(e).__name__}: {e}")

@@ -23,7 +23,6 @@ the same pallas_call lowers for TPU targets).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,9 +17,6 @@ behaviors are part of the contract and are swept in tests.
 from __future__ import annotations
 
 import math
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
 

@@ -24,7 +24,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 
 from ..configs import ARCHS, get_config
 from ..configs.base import SHAPES, shapes_for

@@ -10,9 +10,7 @@ the production mesh (real pod only).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
-import jax
 
 from ..configs import ARCHS, get_config, reduced
 from ..configs.base import ShapeSpec

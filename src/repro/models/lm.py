@@ -15,7 +15,6 @@ launch/sharding.py.  Entry points: ``forward`` / ``lm_loss`` (train),
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
 from typing import Any, Dict, Optional, Tuple

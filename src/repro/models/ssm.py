@@ -16,8 +16,7 @@ Simplifications vs the reference implementation (recorded in DESIGN.md
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

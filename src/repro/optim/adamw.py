@@ -5,7 +5,7 @@ feedback (distributed-optimization option for cross-pod all-reduce).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,17 +22,14 @@ import math
 import statistics
 import time
 from pathlib import Path
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager, restore_resharded
 from ..configs.base import ModelConfig, ShapeSpec
 from ..models import lm
 from ..optim import adamw
-from ..launch import sharding as shd
 from ..launch.steps import build_cell
 
 

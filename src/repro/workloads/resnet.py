@@ -1,7 +1,7 @@
 """ResNet series (He et al.) computation graphs — §4.3 benchmark."""
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 from ..core.graph import Graph, Node
 

@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+Import ``given``/``settings``/``st`` from here instead of ``hypothesis``.
+When hypothesis is installed (requirements-dev.txt pins it) the real
+objects pass straight through; when it's absent, property tests are
+collected but skipped instead of crashing the whole module at import
+time (the seed's ``ModuleNotFoundError: hypothesis``).
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call, returns a placeholder."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -2,14 +2,14 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
-from repro.core import baselines, cg_opt, compiler
-from repro.core.abstraction import (CellType, ChipTier, CIMArch,
-                                    ComputingMode, CoreTier, CrossbarTier,
-                                    get_arch, PRESETS)
-from repro.core.graph import Graph, Node, weight_matrix_shape
-from repro.core.mapping import BitBinding, bind, cores_per_copy, vxbs_per_core
+from repro.core import baselines, compiler
+from repro.core.abstraction import (CellType, ChipTier, ComputingMode,
+                                    CoreTier, CrossbarTier, get_arch,
+                                    PRESETS)
+from repro.core.graph import Graph, Node
+from repro.core.mapping import bind
 from repro.cimsim import perf
 from repro.workloads import get_workload
 

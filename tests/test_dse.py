@@ -1,0 +1,190 @@
+"""DSE engine: compile cache identity, Pareto correctness, sweep
+determinism across worker counts, knob-space validity."""
+import pytest
+
+from repro.core import compiler
+from repro.core.abstraction import ComputingMode, get_arch
+from repro.core.mapping import BitBinding
+from repro.dse import (CompileCache, DesignPoint, DesignSpace,
+                       apply_arch_overrides, dominates, pareto_frontier,
+                       sweep)
+from repro.dse.runner import SweepResult
+from repro.workloads import get_workload
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return CompileCache(tmp_path / "cache")
+
+
+# ---------------------------------------------------------------- cache
+def test_cache_hit_bit_identical_to_fresh_compile(cache):
+    g = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    fresh = compiler.compile_graph(g, arch)
+    cached_miss = compiler.compile_graph(g, arch, cache=cache)
+    assert cache.stats()["disk_entries"] == 1
+
+    # a disk hit (memory layer dropped) must reproduce the result bit for bit
+    cache.drop_memory()
+    hit = compiler.compile_graph(g, arch, cache=cache)
+    assert hit.program.to_text() == fresh.program.to_text()
+    assert hit.text == cached_miss.text
+    assert hit.report() == fresh.report()
+    assert hit.metrics() == fresh.metrics()
+    assert [p.node.name for p in hit.plan.placements] == \
+        [p.node.name for p in fresh.plan.placements]
+
+
+def test_cache_key_sensitivity():
+    g1, g2 = get_workload("tiny_cnn"), get_workload("tiny_mlp")
+    arch = get_arch("toy")
+    k = compiler.compile_key(g1, arch)
+    assert k == compiler.compile_key(g1, arch)            # stable
+    assert k != compiler.compile_key(g2, arch)            # graph-sensitive
+    assert k != compiler.compile_key(g1, arch.replace(act_bits=4))
+    assert k != compiler.compile_key(g1, arch, level="CM")
+    assert k != compiler.compile_key(g1, arch, use_pipeline=False)
+    assert k != compiler.compile_key(g1, arch, binding=BitBinding.B_TO_XB)
+
+
+def test_cache_metrics_fast_path(cache):
+    g = get_workload("tiny_mlp")
+    arch = get_arch("toy")
+    key = compiler.compile_key(g, arch)
+    assert cache.get_metrics(key) is None
+    result = compiler.compile_graph(g, arch, cache=cache)
+    cache.drop_memory()
+    m = cache.get_metrics(key)
+    assert m == result.metrics()
+    assert m["latency_cycles"] > 0
+
+
+def test_global_cache_hook(cache):
+    g = get_workload("tiny_mlp")
+    arch = get_arch("toy")
+    prev = compiler.set_compile_cache(cache)
+    try:
+        r1 = compiler.compile_graph(g, arch)
+        r2 = compiler.compile_graph(g, arch)
+        assert r2 is r1                 # memory-layer hit returns the object
+    finally:
+        compiler.set_compile_cache(prev)
+
+
+# ---------------------------------------------------------------- pareto
+def test_pareto_frontier_hand_computed():
+    # 2-knob space by hand: (latency, power) — minimize both.
+    rows = [
+        {"latency_cycles": 10.0, "peak_power": 8.0, "crossbars_used": 1},
+        {"latency_cycles": 5.0, "peak_power": 9.0, "crossbars_used": 1},
+        {"latency_cycles": 6.0, "peak_power": 9.5, "crossbars_used": 1},
+        {"latency_cycles": 5.0, "peak_power": 9.0, "crossbars_used": 1},
+        {"latency_cycles": 20.0, "peak_power": 1.0, "crossbars_used": 1},
+    ]
+    front = pareto_frontier(rows)
+    # (6, 9.5) dominated by (5, 9); duplicate (5, 9) collapses;
+    # (10, 8), (5, 9), (20, 1) are mutually non-dominated.
+    assert front == [rows[1], rows[0], rows[4]]
+    assert dominates((5.0, 9.0, 1), (6.0, 9.5, 1))
+    assert not dominates((5.0, 9.0, 1), (5.0, 9.0, 1))
+    assert not dominates((20.0, 1.0, 1), (5.0, 9.0, 1))
+
+
+def test_pareto_on_real_sweep_is_nondominated():
+    g = get_workload("tiny_cnn")
+    res = sweep(g, DesignSpace(get_arch("toy")))
+    ok = [r for r in res if r.ok]
+    front = pareto_frontier(ok)
+    assert 1 <= len(front) <= len(ok)
+    objs = ("latency_cycles", "peak_power", "crossbars_used")
+    vec = lambda r: tuple(r.metrics[o] for o in objs)
+    for f in front:
+        assert not any(dominates(vec(o), vec(f)) for o in ok)
+    # every non-frontier point is dominated by (or equal to) some frontier one
+    fronts = {vec(f) for f in front}
+    for o in ok:
+        if vec(o) not in fronts:
+            assert any(dominates(vec(f), vec(o)) for f in front)
+
+
+# ---------------------------------------------------------------- space
+def test_space_clamps_and_filters():
+    arch = get_arch("puma")            # XBM chip: WLM requests clamp to XBM
+    space = DesignSpace(arch)
+    pts = space.points()
+    assert all(ComputingMode(p.level).rank <= arch.mode.rank for p in pts)
+    assert len(pts) == len(set(pts))   # clamping deduplicates
+    # 2 effective levels x 2 bindings x 2 pipeline x 2 duplication
+    assert len(pts) == 16
+
+
+def test_arch_overrides_nested_and_clamped():
+    arch = get_arch("isaac-baseline")
+    out = apply_arch_overrides(arch, {"xb.xb_size": (64, 64),
+                                      "chip.core_number": (8, 8),
+                                      "act_bits": 4})
+    assert out.xb.xb_size == (64, 64)
+    assert out.chip.n_cores == 64
+    assert out.act_bits == 4
+    assert out.xb.parallel_row <= 64   # clamped to the shrunk row count
+    assert arch.xb.xb_size == (128, 128)   # base untouched
+
+
+# ---------------------------------------------------------------- runner
+def _toy_space():
+    return DesignSpace(get_arch("toy"),
+                       arch_axes={"xb.xb_size": [(32, 128), (64, 128)]})
+
+
+def test_sweep_deterministic_across_worker_counts(tmp_path):
+    g = get_workload("tiny_cnn")
+    space = _toy_space()
+    serial = sweep(g, space)
+    pooled = sweep(g, space, cache=CompileCache(tmp_path / "c"), workers=4)
+    assert len(serial) == len(pooled) == 48
+    assert [r.point for r in serial] == [r.point for r in pooled]
+    assert [r.metrics for r in serial] == [r.metrics for r in pooled]
+    # and a warm re-run (any worker count) returns identical metrics
+    warm = sweep(g, space, cache=CompileCache(tmp_path / "c"), workers=2)
+    assert all(r.cached for r in warm if r.ok)
+    assert [r.metrics for r in warm] == [r.metrics for r in serial]
+
+
+def test_sweep_reports_infeasible_points_without_aborting():
+    g = get_workload("tiny_cnn")
+    # a 1-core chip's 2 crossbars cannot hold the 4 bit slices of one
+    # B->XB column unit: those points must fail *individually*
+    toy = get_arch("toy")
+    space = DesignSpace(toy.replace(
+        chip=toy.chip.__class__(core_number=(1, 1))))
+    res = sweep(g, space)
+    assert all(isinstance(r, SweepResult) for r in res)
+    by_binding = {}
+    for r in res:
+        by_binding.setdefault(r.point.binding, []).append(r)
+    assert all(r.ok for r in by_binding["B->XBC"])
+    assert all(not r.ok and "crossbar" in r.error
+               for r in by_binding["B->XB"])
+
+
+def test_sweep_level_beats_or_matches_coarser(tmp_path):
+    """Sanity: finer scheduling levels never lose to coarser ones."""
+    g = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    pts = [DesignPoint(level=lv, binding="B->XBC", use_pipeline=True,
+                       use_duplication=True) for lv in ("CM", "XBM", "WLM")]
+    res = sweep(g, pts, base_arch=arch)
+    lat = {r.point.level: r.metrics["latency_cycles"] for r in res}
+    assert lat["WLM"] <= lat["XBM"] <= lat["CM"] * (1 + 1e-9)
+
+
+def test_design_point_label_roundtrip():
+    p = DesignPoint(level="XBM", binding="B->XB", use_pipeline=False,
+                    use_duplication=True,
+                    arch_overrides=(("xb.cell_precision", 4),))
+    assert p.mode is ComputingMode.XBM
+    assert p.bit_binding is BitBinding.B_TO_XB
+    assert "XBM" in p.label() and "cell_precision" in p.label()
+    kw = p.compile_kwargs()
+    assert kw["use_pipeline"] is False and kw["level"] is ComputingMode.XBM

@@ -2,11 +2,10 @@
 the int8 fake-quant reference bit-exactly (when the ADC is exact)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
-from repro.cimsim.functional import (FunctionalSimulator, make_input,
-                                     make_weights, reference_forward,
-                                     simulate)
+from repro.cimsim.functional import (make_input, make_weights,
+                                     reference_forward, simulate)
 from repro.core.abstraction import (CellType, ChipTier, CIMArch,
                                     ComputingMode, CoreTier, CrossbarTier)
 from repro.core.graph import Graph, Node
@@ -63,6 +62,28 @@ def test_sim_property_random_graphs(seed, depth, hw):
     g = Graph(f"rand{seed}", nodes, {"input": (3, hw, hw)}, ["fc.out"])
     sim_out, ref_out, _ = simulate(g, SMALL, seed=seed)
     np.testing.assert_array_equal(sim_out["fc.out"], ref_out["fc.out"])
+
+
+@pytest.mark.parametrize("mode_name,arch", MODES)
+def test_sim_split_graph_end_to_end(mode_name, arch):
+    """Split-bearing graphs execute end-to-end and match the reference."""
+    nodes = [
+        Node("fc1", "Gemm", ["input"], ["fc1.out"],
+             {"weight_shape": (16, 12)}),
+        Node("sp", "Split", ["fc1.out"], ["sp.a", "sp.b"],
+             {"axis": -1, "parts": [4, 8]}),
+        Node("ra", "Relu", ["sp.a"], ["ra.out"]),
+        Node("rb", "Relu", ["sp.b"], ["rb.out"]),
+        Node("cat", "Concat", ["ra.out", "rb.out"], ["cat.out"],
+             {"axis": -1}),
+        Node("fc2", "Gemm", ["cat.out"], ["fc2.out"],
+             {"weight_shape": (12, 5)}),
+    ]
+    g = Graph("splitnet", nodes, {"input": (16,)}, ["fc2.out"])
+    assert g.shapes["sp.a"] == (4,) and g.shapes["sp.b"] == (8,)
+    sim_out, ref_out, stats = simulate(g, arch)
+    np.testing.assert_array_equal(sim_out["fc2.out"], ref_out["fc2.out"])
+    assert stats.cim_reads > 0
 
 
 def test_reference_shift_calibration_idempotent():

@@ -4,11 +4,10 @@ contracts."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.kernels.cim_mvm import cim_mvm, CimMvmParams, cim_mvm_params
 from repro.kernels.cim_mvm.ops import cim_mvm_signed
-from repro.kernels.cim_mvm import ref
 from repro.core.abstraction import get_arch
 
 RNG = np.random.default_rng(42)

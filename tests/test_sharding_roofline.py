@@ -1,12 +1,10 @@
 """Sharding rule resolution + HLO roofline walker."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis import roofline
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm

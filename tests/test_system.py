@@ -11,7 +11,6 @@ The headline claims, verified against our own simulator (§4.2):
     (functional simulator == int8 reference).
 """
 import numpy as np
-import pytest
 
 from repro.cimsim import perf
 from repro.cimsim.functional import simulate

@@ -2,14 +2,13 @@
 restore), fault-tolerant trainer, serving loop."""
 import dataclasses
 import json
-import os
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.checkpoint import (CheckpointManager, latest_checkpoint,
                               restore_checkpoint, restore_resharded,
