@@ -102,6 +102,100 @@ def compile_key(
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
+def proxy_metrics(
+    graph: Graph,
+    arch: CIMArch,
+    *,
+    level: Optional[Union[str, ComputingMode]] = None,
+    use_pipeline: bool = True,
+    use_duplication: bool = True,
+    binding: BitBinding = BitBinding.B_TO_XBC,
+) -> dict:
+    """Analytic proxy for ``compile_graph(...).metrics()`` — no codegen,
+    no segmentation search, no event-driven simulation.
+
+    The cheap rung of the multi-fidelity DSE searcher (dse.search): build
+    one placement per CIM node with the real ``CostModel``, run the real
+    duplication search over one flat segment, approximate the VVM row
+    spread, and read latency off ``estimate_segment_cycles``.  The bundle
+    carries the sweep objective keys (``latency_cycles``, ``peak_power``,
+    ``crossbars_used``) so a proxy score ranks points the same way a full
+    compile would be ranked — absolute values are *not* comparable across
+    fidelities, and proxies are never cached.
+
+    Raises like ``compile_graph`` for configurations no compile could
+    serve (level above the chip's mode, bit slices that fit no crossbar).
+    """
+    from .cg_opt import (CostModel, balance_duplication,
+                         estimate_segment_cycles, greedy_duplication)
+    from .mvm_opt import peak_active_xbs
+
+    if isinstance(level, str):
+        level = ComputingMode(level)
+    level = level or arch.mode
+    if not arch.mode.allows(level):
+        raise ValueError(
+            f"chip {arch.name} (mode {arch.mode.value}) does not expose the "
+            f"{level.value} interface")
+
+    cm = CostModel(arch, binding)
+    cap_xbs = arch.chip.n_cores * arch.core.n_xbs
+    pls = []
+    for node in graph.cim_nodes:
+        p = cm.placement(node, graph)
+        if p.mapping.xbs_per_vxb > cap_xbs:
+            raise ValueError(
+                f"{node.name}: one VXB column unit spans "
+                f"{p.mapping.xbs_per_vxb} crossbars but the chip offers "
+                f"only {cap_xbs}")
+        pls.append(p)
+
+    budget = arch.chip.n_cores
+    multi_segment = sum(p.cores for p in pls) > budget
+    if use_duplication and not multi_segment and pls:
+        dup = balance_duplication if use_pipeline else greedy_duplication
+        if level.allows(ComputingMode.XBM):
+            dup(pls, cap_xbs, unit="xbs")
+        else:
+            dup(pls, budget, unit="cores")
+
+    if level.allows(ComputingMode.WLM):
+        # vvm_opt's remap, first-order: spend spare crossbars spreading the
+        # worst bottlenecks' row groups
+        spare = max(0, cap_xbs - sum(p.dup * p.mapping.n_xbs for p in pls))
+        for p in sorted(pls, key=lambda q: -q.stage_cycles):
+            if p.row_groups <= 1:
+                continue
+            per_spread = max(1, p.dup * p.mapping.n_xbs)
+            k = min(p.row_groups, 1 + spare // per_spread)
+            if k > 1:
+                spare -= (k - 1) * per_spread
+                p.row_spread = k
+
+    latency = estimate_segment_cycles(pls, use_pipeline)
+    rewrite = 0.0
+    if multi_segment:
+        # every crossbar is reprogrammed per inference; cores write in
+        # parallel (cg_opt._rewrite_cycles on the whole placement list)
+        n_xbs = sum(p.dup * p.mapping.n_xbs for p in pls)
+        rewrite = n_xbs * arch.t_write_xb() / max(arch.chip.n_cores, 1)
+        latency += rewrite
+    stagger = level.allows(ComputingMode.XBM)
+    active = [peak_active_xbs(p, stagger) for p in pls]
+    peak = float((sum if use_pipeline else max)(active)) if active else 0.0
+    xbs_used = sum(p.dup * p.mapping.n_xbs for p in pls)
+    if multi_segment:
+        xbs_used = min(xbs_used, cap_xbs)   # segments reuse the pool
+    return {
+        "latency_cycles": float(max(latency, 1e-9)),
+        "compute_cycles": float(sum(p.stage_cycles for p in pls)),
+        "rewrite_cycles": float(rewrite),
+        "peak_power": peak,
+        "crossbars_used": int(xbs_used),
+        "fidelity": "proxy",
+    }
+
+
 def compile_graph(
     graph: Graph,
     arch: CIMArch,

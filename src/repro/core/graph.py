@@ -145,6 +145,39 @@ class Graph:
         self.shapes = sh
         return sh
 
+    # -- fidelity slicing --------------------------------------------------
+    def prefix(self, n_nodes: int) -> "Graph":
+        """First ``n_nodes`` nodes (topological order) as a standalone graph.
+
+        The reduced-fidelity proxy of the DSE searcher (dse.search): a
+        prefix compiles and simulates like any graph, at a fraction of the
+        cost, and its latency ranks design points like the full model does
+        (the dropped suffix is built from the same operator population).
+        Tensors whose consumers were all dropped become graph outputs, so
+        no kept node dangles.  Nodes are copied — compiling a prefix never
+        touches this graph's ``sched`` annotations.  ``n_nodes`` at or
+        above ``len(self.nodes)`` returns ``self`` unchanged, so full-
+        fidelity requests share compile-cache entries with direct compiles.
+        """
+        if n_nodes < 1:
+            raise ValueError("prefix needs at least one node")
+        if n_nodes >= len(self.nodes):
+            return self
+        kept = self.nodes[:n_nodes]
+        kept_names = {n.name for n in kept}
+        outputs = []
+        for n in kept:
+            for t in n.outputs:
+                consumers = [c for c in self.consumers(t)
+                             if c.name in kept_names]
+                if t in self.outputs or not consumers:
+                    outputs.append(t)
+        nodes = [Node(n.name, n.op_type, list(n.inputs), list(n.outputs),
+                      dict(n.attrs)) for n in kept]
+        consumed = {t for n in kept for t in n.inputs}
+        inputs = {t: shp for t, shp in self.inputs.items() if t in consumed}
+        return Graph(f"{self.name}.prefix{n_nodes}", nodes, inputs, outputs)
+
     # -- serialization -----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
         return {

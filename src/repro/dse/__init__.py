@@ -7,20 +7,36 @@ duplication switches, and the Abs-arch parameters themselves (crossbar
 geometry, cell precision, parallel rows, core counts).  This package
 turns the one-shot compiler into a search service:
 
-  * ``space``   — enumerate valid ``DesignPoint``s of a ``DesignSpace``;
-  * ``cache``   — content-addressed, disk-persisted compile cache;
-  * ``runner``  — sweep points concurrently through ``compile_graph`` +
-                  ``cimsim.perf.estimate``;
-  * ``pareto``  — Pareto frontier over (latency, peak power, crossbars).
+  * ``space``    — enumerate valid ``DesignPoint``s of a ``DesignSpace``;
+  * ``cache``    — content-addressed, disk-persisted compile cache;
+  * ``runner``   — the shared job-queue evaluation primitive
+                   (``EvalJob``/``run_jobs``) plus the exhaustive
+                   ``sweep`` built on it;
+  * ``search``   — multi-fidelity successive halving (proxy metrics →
+                   graph-prefix compiles → full compiles);
+  * ``campaign`` — multi-workload campaigns over one queue + cache,
+                   with per-workload frontiers and robust-point summary;
+  * ``pareto``   — Pareto frontier over (latency, peak power, crossbars).
+
+See docs/DSE.md for the guide.
 """
 from .cache import CompileCache, default_cache_dir
+from .campaign import (CampaignResult, RobustPoint, WorkloadOutcome,
+                       robust_points, run_campaign)
 from .pareto import DEFAULT_OBJECTIVES, dominates, pareto_frontier
-from .runner import SweepResult, evaluate_point, sweep
+from .runner import (EvalJob, SweepResult, evaluate_point, run_jobs,
+                     sweep)
+from .search import (DEFAULT_LADDER, HalvingSearch, Rung, RungLog,
+                     SearchResult, successive_halving)
 from .space import DesignPoint, DesignSpace, apply_arch_overrides
 
 __all__ = [
     "CompileCache", "default_cache_dir",
+    "CampaignResult", "RobustPoint", "WorkloadOutcome",
+    "robust_points", "run_campaign",
     "DEFAULT_OBJECTIVES", "dominates", "pareto_frontier",
-    "SweepResult", "evaluate_point", "sweep",
+    "EvalJob", "SweepResult", "evaluate_point", "run_jobs", "sweep",
+    "DEFAULT_LADDER", "HalvingSearch", "Rung", "RungLog",
+    "SearchResult", "successive_halving",
     "DesignPoint", "DesignSpace", "apply_arch_overrides",
 ]

@@ -1,22 +1,43 @@
-"""Sweep executor: compile + score every design point, cached, parallel.
+"""Job-queue evaluation primitive shared by sweeps, searches, campaigns.
 
-Each point is independent, so the runner farms them out to a process
-pool (``workers > 1``); results are re-ordered by point index, so the
-outcome is bit-identical for any worker count.  Scoring a point:
+An ``EvalJob`` is one (graph, design point) evaluation at some fidelity:
+a full compile + perf estimate by default, or an analytic proxy
+(``compiler.proxy_metrics``) when ``proxy=True``.  ``run_jobs`` executes
+any job list — one workload's exhaustive sweep, one rung of a
+successive-halving search, or a whole campaign round interleaving many
+workloads — through a single queue, so wall-clock scales with total work
+rather than with the number of callers.
+
+Execution model:
+
+  * ``workers <= 1`` (or a single job) runs in-process, reusing the
+    caller's cache object so its memory layer stays live;
+  * ``workers > 1`` farms jobs to a process pool; each worker re-opens
+    the cache directory (``memory=False`` — workers must not grow
+    resident memory) and entries are written atomically.  If the host
+    cannot fork, the pool degrades to the same per-job code path
+    serially.  Either way the caller's cache memory layer is dropped
+    afterwards so freshly-written disk entries become visible to it.
+
+Results come back ordered by job index, so outcomes are bit-identical
+for any worker count.  A job whose compilation raises (e.g. an arch
+override too small to hold any chunk of the model) is reported with
+``error`` set rather than aborting the queue.
+
+Scoring a full-fidelity job:
 
   1. compute its ``compile_key``;
   2. warm path — the cache's *metrics* file answers without unpickling;
   3. cold path — ``compile_graph`` (which itself consults the cache for
      the full result) then ``perf.estimate``; the entry is persisted.
 
-A point whose compilation raises (e.g. an arch override too small to
-hold any chunk of the model) is reported with ``error`` set rather than
-aborting the sweep.
+Proxy jobs are analytic and never touch the cache.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
+                    Union)
 
 from ..core import compiler
 from ..core.abstraction import CIMArch
@@ -26,12 +47,25 @@ from .space import DesignPoint, DesignSpace
 
 
 @dataclasses.dataclass
+class EvalJob:
+    """One (graph, point) evaluation queued through ``run_jobs``."""
+
+    index: int                   # global order key (results are re-sorted)
+    graph: Graph
+    point: DesignPoint
+    arch: CIMArch                # base arch the point's overrides apply to
+    proxy: bool = False          # analytic proxy_metrics instead of compile
+    tag: Any = None              # caller routing key (e.g. workload name)
+
+
+@dataclasses.dataclass
 class SweepResult:
     index: int
     point: DesignPoint
     metrics: Optional[Dict[str, float]]
     cached: bool = False
     error: Optional[str] = None
+    tag: Any = None
 
     @property
     def ok(self) -> bool:
@@ -41,7 +75,7 @@ class SweepResult:
 def evaluate_point(graph: Graph, base_arch: CIMArch, point: DesignPoint,
                    cache: Optional[CompileCache] = None,
                    ) -> Tuple[Dict[str, float], bool]:
-    """(metrics, was_cached) for one design point."""
+    """(metrics, was_cached) for one design point at full fidelity."""
     arch = point.arch_for(base_arch)
     kwargs = point.compile_kwargs()
     if cache is not None:
@@ -53,16 +87,68 @@ def evaluate_point(graph: Graph, base_arch: CIMArch, point: DesignPoint,
     return result.metrics(), False
 
 
-def _eval_one(args) -> SweepResult:
-    index, graph, base_arch, point, cache_dir = args
-    cache = CompileCache(cache_dir, memory=False) if cache_dir else None
+def _eval_job(job: EvalJob, cache: Optional[CompileCache]) -> SweepResult:
+    """The one evaluation code path every execution mode shares."""
     try:
-        metrics, cached = evaluate_point(graph, base_arch, point, cache)
-        return SweepResult(index=index, point=point, metrics=metrics,
-                           cached=cached)
-    except Exception as e:  # infeasible point: report, don't abort the sweep
-        return SweepResult(index=index, point=point, metrics=None,
-                           error=f"{type(e).__name__}: {e}")
+        if job.proxy:
+            arch = job.point.arch_for(job.arch)
+            kwargs = job.point.compile_kwargs()
+            kwargs.pop("expand", None)
+            metrics = compiler.proxy_metrics(job.graph, arch, **kwargs)
+            return SweepResult(index=job.index, point=job.point,
+                               metrics=metrics, tag=job.tag)
+        metrics, cached = evaluate_point(job.graph, job.arch, job.point,
+                                         cache)
+        return SweepResult(index=job.index, point=job.point, metrics=metrics,
+                           cached=cached, tag=job.tag)
+    except Exception as e:  # infeasible point: report, don't abort the queue
+        return SweepResult(index=job.index, point=job.point, metrics=None,
+                           error=f"{type(e).__name__}: {e}", tag=job.tag)
+
+
+def _eval_job_worker(args: Tuple[EvalJob, Optional[str]]) -> SweepResult:
+    """Pool entry: re-open the cache directory, then the shared path."""
+    job, cache_dir = args
+    cache = CompileCache(cache_dir, memory=False) if cache_dir else None
+    return _eval_job(job, cache)
+
+
+def run_jobs(jobs: Iterable[EvalJob],
+             cache: Optional[CompileCache] = None,
+             workers: int = 1) -> List[SweepResult]:
+    """Evaluate ``jobs`` and return results sorted by job index."""
+    jobs = list(jobs)
+    if workers <= 1 or len(jobs) <= 1:
+        results = [_eval_job(j, cache) for j in jobs]
+        results.sort(key=lambda r: r.index)
+        return results
+
+    cache_dir = str(cache.root) if cache is not None else None
+    args = [(j, cache_dir) for j in jobs]
+    try:
+        from concurrent.futures import ProcessPoolExecutor
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            results = list(pool.map(_eval_job_worker, args, chunksize=1))
+    except (OSError, ImportError):   # no process support: degrade serially
+        results = [_eval_job_worker(a) for a in args]
+    results.sort(key=lambda r: r.index)
+    if cache is not None:
+        # the caller's memory layer predates the workers' writes (pool and
+        # fallback alike use private cache handles): resync it from disk
+        cache.drop_memory()
+    return results
+
+
+def resolve_space(space: Union[DesignSpace, Sequence[DesignPoint]],
+                  base_arch: Optional[CIMArch] = None,
+                  ) -> Tuple[List[DesignPoint], CIMArch]:
+    """(points, base arch) from a ``DesignSpace`` or explicit point list."""
+    if isinstance(space, DesignSpace):
+        return space.points(), base_arch or space.arch
+    points = list(space)
+    if base_arch is None:
+        raise ValueError("base_arch is required with an explicit point list")
+    return points, base_arch
 
 
 def sweep(graph: Graph,
@@ -70,51 +156,14 @@ def sweep(graph: Graph,
           base_arch: Optional[CIMArch] = None,
           cache: Optional[CompileCache] = None,
           workers: int = 1) -> List[SweepResult]:
-    """Evaluate every point of ``space`` on ``graph``.
+    """Exhaustively evaluate every point of ``space`` on ``graph``.
 
     ``space`` is a ``DesignSpace`` (its ``arch`` is the base) or an
     explicit point list plus ``base_arch``.  ``cache=None`` disables
-    caching; ``workers`` > 1 uses a process pool (each worker re-opens
-    the cache directory; entries are written atomically).
+    caching.  Thin wrapper over ``run_jobs`` — see module docstring for
+    the execution model.
     """
-    if isinstance(space, DesignSpace):
-        points = space.points()
-        base_arch = base_arch or space.arch
-    else:
-        points = list(space)
-        if base_arch is None:
-            raise ValueError("base_arch is required with an explicit "
-                             "point list")
-
-    if workers <= 1 or len(points) <= 1:
-        return [_eval_one((i, graph, base_arch, p, None))
-                if cache is None else _eval_one_local(i, graph, base_arch,
-                                                      p, cache)
-                for i, p in enumerate(points)]
-
-    cache_dir = str(cache.root) if cache is not None else None
-    jobs = [(i, graph, base_arch, p, cache_dir)
-            for i, p in enumerate(points)]
-    try:
-        from concurrent.futures import ProcessPoolExecutor
-        with ProcessPoolExecutor(max_workers=workers) as pool:
-            results = list(pool.map(_eval_one, jobs, chunksize=1))
-    except (OSError, ImportError):   # no process support: degrade serially
-        results = [_eval_one(j) for j in jobs]
-    results.sort(key=lambda r: r.index)
-    if cache is not None:
-        # surface freshly-written entries to the caller's cache layer
-        cache.drop_memory()
-    return results
-
-
-def _eval_one_local(index: int, graph: Graph, base_arch: CIMArch,
-                    point: DesignPoint, cache: CompileCache) -> SweepResult:
-    """Serial path reusing the caller's cache object (memory layer live)."""
-    try:
-        metrics, cached = evaluate_point(graph, base_arch, point, cache)
-        return SweepResult(index=index, point=point, metrics=metrics,
-                           cached=cached)
-    except Exception as e:
-        return SweepResult(index=index, point=point, metrics=None,
-                           error=f"{type(e).__name__}: {e}")
+    points, base_arch = resolve_space(space, base_arch)
+    return run_jobs((EvalJob(index=i, graph=graph, point=p, arch=base_arch)
+                     for i, p in enumerate(points)),
+                    cache=cache, workers=workers)

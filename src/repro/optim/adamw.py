@@ -18,14 +18,16 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params: Any) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(count=jnp.zeros((), jnp.int32),
                       mu=jax.tree.map(zeros, params),
                       nu=jax.tree.map(zeros, params))
 
 
 def adamw_state_specs(param_specs: Any) -> AdamWState:
-    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    def f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
     return AdamWState(count=jax.ShapeDtypeStruct((), jnp.int32),
                       mu=jax.tree.map(f32, param_specs),
                       nu=jax.tree.map(f32, param_specs))

@@ -98,7 +98,10 @@ def test_pareto_on_real_sweep_is_nondominated():
     front = pareto_frontier(ok)
     assert 1 <= len(front) <= len(ok)
     objs = ("latency_cycles", "peak_power", "crossbars_used")
-    vec = lambda r: tuple(r.metrics[o] for o in objs)
+
+    def vec(r):
+        return tuple(r.metrics[o] for o in objs)
+
     for f in front:
         assert not any(dominates(vec(o), vec(f)) for o in ok)
     # every non-frontier point is dominated by (or equal to) some frontier one

@@ -1,0 +1,236 @@
+"""Multi-fidelity search: Graph.prefix fidelity slices, proxy metrics,
+successive halving vs exhaustive ground truth, campaign determinism."""
+import numpy as np
+import pytest
+
+from repro.cimsim.functional import simulate
+from repro.core import compiler
+from repro.core.abstraction import (CellType, ChipTier, CIMArch,
+                                    ComputingMode, CoreTier, CrossbarTier,
+                                    get_arch)
+from repro.dse import (CompileCache, DesignSpace, HalvingSearch, Rung,
+                       run_campaign, successive_halving, sweep)
+from repro.workloads import get_workload
+
+SIM_ARCH = CIMArch(
+    name="test-wlm", mode=ComputingMode.WLM,
+    chip=ChipTier(core_number=(4, 1), alu_ops_per_cycle=64, l0_bw_bits=1024),
+    core=CoreTier(xb_number=(2, 1), l1_bw_bits=1024),
+    xb=CrossbarTier(xb_size=(32, 32), dac_bits=1, adc_bits=8,
+                    cell_type=CellType.SRAM, cell_precision=2,
+                    parallel_row=8),
+)
+
+
+def _space():
+    return DesignSpace(get_arch("toy"),
+                       arch_axes={"xb.xb_size": [(32, 128), (64, 128)]})
+
+
+def _best(results):
+    ok = [r for r in results if r.ok]
+    return min(ok, key=lambda r: (r.metrics["latency_cycles"], r.index))
+
+
+# ------------------------------------------------------------- Graph.prefix
+def test_prefix_structure():
+    g = get_workload("tiny_cnn")
+    p = g.prefix(3)
+    assert [n.name for n in p.nodes] == [n.name for n in g.nodes[:3]]
+    assert p.name != g.name                      # distinct compile-cache keys
+    # dangling tensors became outputs; every output has an inferred shape
+    assert p.outputs == ["conv2.out"]
+    assert all(t in p.shapes for t in p.outputs)
+    # nodes are copies: compiling the prefix never annotates the original
+    compiler.compile_graph(p, get_arch("toy"))
+    assert all(not n.sched for n in g.nodes)
+    # degenerate requests
+    assert g.prefix(len(g.nodes)) is g
+    assert g.prefix(10_000) is g
+    with pytest.raises(ValueError):
+        g.prefix(0)
+
+
+def test_prefix_keeps_graph_outputs_and_split_tails():
+    g = get_workload("tiny_mlp")
+    p = g.prefix(1)
+    assert p.outputs == ["fc1.out"]
+    assert list(p.inputs) == ["input"]
+    full = g.prefix(len(g.nodes))
+    assert full.outputs == g.outputs
+
+
+@pytest.mark.parametrize("n_nodes", [2, 5])
+def test_prefix_compiles_and_simulates_bit_exact(n_nodes):
+    g = get_workload("tiny_cnn").prefix(n_nodes)
+    sim_out, ref_out, stats = simulate(g, SIM_ARCH)
+    for t in g.outputs:
+        np.testing.assert_array_equal(sim_out[t], ref_out[t])
+    assert stats.cim_reads > 0
+    m = compiler.compile_graph(g, SIM_ARCH).metrics()
+    assert m["latency_cycles"] > 0
+
+
+def test_prefix_stage_count_grows_with_fidelity():
+    # latency is NOT monotone in prefix size (the duplication budget
+    # redistributes), but scheduled CIM stages are
+    g = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    stages = [compiler.compile_graph(g.prefix(n), arch).metrics()
+              ["n_stages"] for n in (1, 3, len(g.nodes))]
+    assert stages[0] <= stages[1] <= stages[2]
+    assert stages[0] >= 1
+
+
+# ------------------------------------------------------------ proxy metrics
+def test_proxy_metrics_deterministic_and_knob_sensitive():
+    g = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    m1 = compiler.proxy_metrics(g, arch)
+    assert m1 == compiler.proxy_metrics(g, arch)
+    assert m1["fidelity"] == "proxy"
+    for key in ("latency_cycles", "peak_power", "crossbars_used"):
+        assert m1[key] >= 0
+    nopipe = compiler.proxy_metrics(g, arch, use_pipeline=False)
+    assert nopipe["latency_cycles"] >= m1["latency_cycles"]
+    nodup = compiler.proxy_metrics(g, arch, use_duplication=False)
+    assert nodup["crossbars_used"] <= m1["crossbars_used"]
+
+
+def test_proxy_metrics_raises_like_compile():
+    g = get_workload("tiny_cnn")
+    arch = get_arch("puma")            # XBM chip: WLM must be rejected
+    with pytest.raises(ValueError):
+        compiler.proxy_metrics(g, arch, level="WLM")
+
+
+# ------------------------------------------------------ successive halving
+def test_halving_finds_exhaustive_best_tiny(tmp_path):
+    space = _space()
+    for wl in ("tiny_cnn", "tiny_mlp"):
+        g = get_workload(wl)
+        cache = CompileCache(tmp_path / wl)
+        exhaustive = sweep(g, space, cache=cache)
+        sr = successive_halving(g, space, cache=cache)
+        assert sr.best is not None
+        assert sr.best.point == _best(exhaustive).point
+        assert sr.best.metrics == _best(exhaustive).metrics
+        # acceptance: <= 1/3 the full-fidelity compiles of exhaustive
+        assert sr.full_evals * 3 <= len(exhaustive)
+        # the ladder was actually multi-fidelity
+        fidelities = [log.fidelity for log in sr.rungs]
+        assert fidelities == ["proxy", "prefix", "full"]
+        assert sr.rungs[0].evaluated == len(space.points())
+        assert sr.rungs[0].full_evals == 0
+
+
+def test_halving_deterministic_across_worker_counts(tmp_path):
+    g = get_workload("tiny_cnn")
+    space = _space()
+    a = successive_halving(g, space, cache=CompileCache(tmp_path / "a"))
+    b = successive_halving(g, space, cache=CompileCache(tmp_path / "b"),
+                           workers=4)
+    assert [r.point for r in a.results] == [r.point for r in b.results]
+    assert [r.metrics for r in a.results] == [r.metrics for r in b.results]
+    assert a.full_evals == b.full_evals
+
+
+def test_halving_reuses_cache_across_reruns(tmp_path):
+    g = get_workload("tiny_cnn")
+    space = _space()
+    cache = CompileCache(tmp_path / "c")
+    first = successive_halving(g, space, cache=cache)
+    cache.drop_memory()
+    again = successive_halving(g, space, cache=cache)
+    assert all(r.cached for r in again.results if r.ok), \
+        "promoted points must pay nothing twice"
+    assert [r.metrics for r in again.results] == \
+        [r.metrics for r in first.results]
+
+
+def test_halving_custom_ladder_and_validation():
+    g = get_workload("tiny_mlp")
+    space = _space()
+    sr = successive_halving(g, space,
+                            ladder=(Rung("proxy"), Rung("full")), eta=4)
+    assert [log.fidelity for log in sr.rungs] == ["proxy", "full"]
+    with pytest.raises(ValueError):
+        HalvingSearch(g, space, ladder=(Rung("proxy"),))   # no full rung
+    with pytest.raises(ValueError):
+        HalvingSearch(g, space, eta=1)
+    with pytest.raises(ValueError):
+        Rung("nonsense")
+
+
+def test_halving_reports_infeasible_without_aborting():
+    g = get_workload("tiny_cnn")
+    toy = get_arch("toy")
+    arch = toy.replace(chip=toy.chip.__class__(core_number=(1, 1)))
+    # B->XB on a 1-core chip is infeasible (4 bit slices, 2 crossbars):
+    # the proxy rung must filter those without killing the search
+    sr = successive_halving(g, DesignSpace(arch))
+    assert sr.best is not None
+    assert sr.best.point.binding == "B->XBC"
+
+
+# ----------------------------------------------------------------- campaign
+def _campaign_graphs():
+    return {"tiny_cnn": get_workload("tiny_cnn"),
+            "tiny_mlp": get_workload("tiny_mlp")}
+
+
+def _flat(camp):
+    return {name: [(r.point, r.metrics, r.error) for r in w.results]
+            for name, w in camp.workloads.items()}
+
+
+def test_campaign_order_independent_across_workers(tmp_path):
+    space = _space()
+    camp1 = run_campaign(_campaign_graphs(), space,
+                         cache=CompileCache(tmp_path / "w1"), workers=1)
+    camp4 = run_campaign(_campaign_graphs(), space,
+                         cache=CompileCache(tmp_path / "w4"), workers=4)
+    assert _flat(camp1) == _flat(camp4)
+    assert [(rp.point, rp.max_regret) for rp in camp1.robust] == \
+        [(rp.point, rp.max_regret) for rp in camp4.robust]
+    assert camp1.full_evals == camp4.full_evals
+
+
+def test_campaign_halving_beats_exhaustive_cost(tmp_path):
+    space = _space()
+    cache = CompileCache(tmp_path / "c")
+    camp = run_campaign(_campaign_graphs(), space, cache=cache)
+    ex = run_campaign(_campaign_graphs(), space, cache=cache,
+                      mode="exhaustive")
+    assert camp.full_evals * 3 <= ex.full_evals
+    # same per-workload winner as the exhaustive campaign
+    for name, w in camp.workloads.items():
+        assert w.best.point == ex.workloads[name].best.point
+    # frontier members are full-fidelity feasible results
+    for w in camp.workloads.values():
+        assert w.frontier and all(r.ok for r in w.frontier)
+
+
+def test_campaign_robust_points_are_near_optimal_everywhere(tmp_path):
+    space = _space()
+    camp = run_campaign(_campaign_graphs(), space,
+                        cache=CompileCache(tmp_path / "c"),
+                        mode="exhaustive", robust_tol=0.25)
+    assert camp.robust, "exhaustive tiny campaign should find robust points"
+    for rp in camp.robust:
+        assert rp.max_regret <= 0.25
+        assert set(rp.regret) == set(camp.workloads)
+        for name, w in camp.workloads.items():
+            floor = w.best.metrics["latency_cycles"]
+            got = next(r.metrics["latency_cycles"] for r in w.results
+                       if r.ok and r.point == rp.point)
+            assert got <= floor * 1.25 + 1e-9
+
+
+def test_campaign_accepts_graph_sequences(tmp_path):
+    space = _space()
+    camp = run_campaign([get_workload("tiny_mlp")], space,
+                        cache=CompileCache(tmp_path / "c"))
+    assert list(camp.workloads) == ["tiny_mlp"]
+    with pytest.raises(ValueError):
+        run_campaign(_campaign_graphs(), space, mode="bogus")

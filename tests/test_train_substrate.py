@@ -28,7 +28,8 @@ from repro.train import Trainer, TrainerConfig
 def test_adamw_minimizes_quadratic():
     params = {"w": jnp.ones((8,)) * 5.0}
     opt = adamw.adamw_init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     for _ in range(200):
         g = jax.grad(loss)(params)
         params, opt = adamw.adamw_update(g, opt, params, lr=0.1,

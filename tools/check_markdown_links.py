@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Markdown link checker (no external deps).
+
+Scans the given markdown files/directories for inline links and images
+``[text](target)`` and verifies every *relative* target resolves to an
+existing file or directory (anchors are stripped; ``http(s)``/``mailto``
+links are skipped — CI must not depend on the network).  Exits non-zero
+listing every broken link.
+
+    python tools/check_markdown_links.py README.md docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: [text](target) / ![alt](target) — target up to the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def iter_md_files(paths):
+    for p in map(Path, paths):
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        else:
+            yield p
+
+
+def check_file(path: Path):
+    """Yield (line_number, target) for every broken relative link."""
+    text = path.read_text(encoding="utf-8")
+    in_fence = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                yield lineno, target
+
+
+def main(argv) -> int:
+    paths = argv or ["README.md", "docs"]
+    broken = []
+    n_files = 0
+    for md in iter_md_files(paths):
+        if not md.exists():
+            broken.append((md, 0, "<file missing>"))
+            continue
+        n_files += 1
+        for lineno, target in check_file(md):
+            broken.append((md, lineno, target))
+    for md, lineno, target in broken:
+        print(f"BROKEN {md}:{lineno}: {target}", file=sys.stderr)
+    print(f"checked {n_files} markdown file(s): "
+          f"{'FAIL, ' + str(len(broken)) + ' broken link(s)' if broken else 'all links resolve'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
