@@ -8,7 +8,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from cim_common import smoke_subset
-from repro.kernels.cim_mvm import cim_mvm, CimMvmParams
+from repro.kernels.cim_mvm import cim_mvm, cim_mvm_tiles, CimMvmParams
 
 
 def rows():
@@ -26,6 +26,32 @@ def rows():
                 cim_mvm(x, w, p, use_kernel=use_kernel).block_until_ready()
             us = (time.time() - t0) / n * 1e6
             out.append((f"kernel_{tag}_{m}x{r}x{c}_us", us, ""))
+
+    # executor-style tile batching: T crossbar tiles in one dispatch vs
+    # one oracle dispatch per tile (the interpreter's access pattern);
+    # shapes mirror real per-node tile sets, where dispatch overhead
+    # dominates the small per-tile compute
+    for (t_tiles, m, r, c) in smoke_subset(((16, 16, 32, 32),
+                                            (64, 16, 128, 32))):
+        xt = jnp.asarray(rng.integers(0, 256, (t_tiles, m, r)), jnp.int32)
+        wt = jnp.asarray(rng.integers(0, 256, (t_tiles, r, c)), jnp.int32)
+
+        def batched():
+            cim_mvm_tiles(xt, wt, p).block_until_ready()
+
+        def per_tile():
+            for i in range(t_tiles):
+                cim_mvm(xt[i], wt[i], p, use_kernel=False).block_until_ready()
+
+        for fn in (batched, per_tile):
+            fn()                      # warm the jit caches
+        n = 3
+        for fn, tag in ((batched, "tiles_batched"), (per_tile, "tiles_loop")):
+            t0 = time.time()
+            for _ in range(n):
+                fn()
+            us = (time.time() - t0) / n * 1e6
+            out.append((f"kernel_{tag}_{t_tiles}x{m}x{r}x{c}_us", us, ""))
     return out
 
 

@@ -17,6 +17,7 @@ def main() -> None:
     import fig22_sensitivity
     import kernel_bench
     import roofline_table
+    import simulator_bench
 
     sections = [
         ("fig20 (generality: Jia/PUMA/Jain/Poly-Schedule)",
@@ -24,6 +25,8 @@ def main() -> None:
         ("fig21 (ResNet multi-level ablation)", fig21_ablation.rows),
         ("fig22 (architecture sensitivity, ViT)", fig22_sensitivity.rows),
         ("kernels (cim_mvm)", kernel_bench.rows),
+        ("simulator (interpreter vs trace-lowered executor)",
+         simulator_bench.rows),
         ("dse (cross-tier sweep + compile cache)", dse_sweep.rows),
     ]
     print("name,value,note")

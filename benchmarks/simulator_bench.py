@@ -1,0 +1,131 @@
+"""Functional-simulation benchmark: op-by-op interpreter vs the
+trace-lowered batched executor (cimsim.executor), single-inference and
+batched.
+
+Emits ``BENCH_simulator.json`` next to this script (override the path
+with ``REPRO_BENCH_SIM_JSON``; under ``REPRO_BENCH_SMOKE=1`` nothing is
+written unless the override is set) so future PRs can regress-check the
+perf trajectory: the executor must stay >=10x faster than the
+interpreter on ResNet single-inference and batch=8 must cost <4x
+batch=1.
+
+Note the full (non-smoke) run interprets ResNet once op by op — that is
+the point being measured and takes a few minutes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from pathlib import Path
+
+import numpy as np
+
+from cim_common import SMOKE, get_arch, get_workload
+from repro.cimsim.functional import (FunctionalSimulator, calibrate_shifts,
+                                     make_input, make_weights)
+from repro.cimsim.executor import lower
+from repro.core import compiler
+from repro.kernels.cim_mvm import cim_mvm_params
+
+
+def _steady_ms(fn, runs: int) -> float:
+    ts = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return statistics.median(ts)
+
+
+def _measure_cell(tag: str, workload, arch, *, interp_runs: int = 1,
+                  exec_runs: int = 20, batch_sizes=(1, 2, 8)) -> dict:
+    graph = get_workload(workload) if isinstance(workload, str) else workload
+    params = cim_mvm_params(arch)
+    weights = make_weights(graph, 0)
+    x0 = make_input(graph, 0)
+    shifts = calibrate_shifts(graph, weights, x0, params)
+
+    # interpreter: expanded flow, one jnp dispatch per crossbar read
+    res_i = compiler.compile_graph(graph, arch, expand=True)
+    sim = FunctionalSimulator(res_i.plan, res_i.program, weights, shifts,
+                              params=params)
+    t0 = time.perf_counter()
+    for _ in range(interp_runs):
+        sim_out = sim.run(x0)
+    interp_ms = (time.perf_counter() - t0) * 1e3 / interp_runs
+
+    # executor: lower once, batched dispatches thereafter
+    res_e = compiler.compile_graph(graph, arch)
+    t0 = time.perf_counter()
+    exe = lower(res_e.plan, res_e.program, params=params)
+    packed = exe.pack(weights)
+    lower_ms = (time.perf_counter() - t0) * 1e3
+    out = exe.run(x0, packed=packed, shifts=shifts)   # traces batch=1
+    for t in graph.outputs:                            # stays bit-exact
+        np.testing.assert_array_equal(out[t], sim_out[t])
+    exec_ms = _steady_ms(lambda: exe.run(x0, packed=packed, shifts=shifts),
+                         exec_runs)
+
+    batch_ms = {}
+    for b in batch_sizes:
+        xs = {name: np.stack([make_input(graph, s)[name] for s in range(b)])
+              for name in graph.inputs}
+        exe.run_batch(xs, packed=packed, shifts=shifts)   # trace this shape
+        batch_ms[str(b)] = _steady_ms(
+            lambda: exe.run_batch(xs, packed=packed, shifts=shifts),
+            exec_runs)
+
+    return {
+        "cell": tag,
+        "workload": graph.name,
+        "arch": arch.name,
+        "mode": arch.mode.value,
+        "interp_ms": round(interp_ms, 3),
+        "exec_ms": round(exec_ms, 3),
+        "speedup": round(interp_ms / exec_ms, 1),
+        "lower_ms": round(lower_ms, 3),
+        "batch_ms": {k: round(v, 3) for k, v in batch_ms.items()},
+        "batch8_over_batch1": round(batch_ms["8"] / batch_ms["1"], 3)
+        if "8" in batch_ms else None,
+        "units": exe.stats.units,
+        "dispatches": exe.stats.dispatches,
+    }
+
+
+def cells() -> list:
+    out = [_measure_cell("tiny_cnn/toy", "tiny_cnn", get_arch("toy"),
+                         interp_runs=1 if SMOKE else 3)]
+    if not SMOKE:
+        out.append(_measure_cell(
+            "resnet18@16/isaac", get_workload("resnet18", in_hw=16),
+            get_arch("isaac-baseline")))
+    return out
+
+
+def rows():
+    data = {"schema": 1, "smoke": SMOKE, "cells": cells()}
+    path = os.environ.get("REPRO_BENCH_SIM_JSON")
+    if path or not SMOKE:
+        path = Path(path) if path else \
+            Path(__file__).resolve().parent / "BENCH_simulator.json"
+        path.write_text(json.dumps(data, indent=2) + "\n", encoding="utf-8")
+    out = []
+    for c in data["cells"]:
+        tag = c["cell"].replace("/", "_").replace("@", "")
+        out.append((f"sim_interp_{tag}_ms", c["interp_ms"], "op-by-op"))
+        out.append((f"sim_exec_{tag}_ms", c["exec_ms"], "trace-lowered"))
+        out.append((f"sim_speedup_{tag}_x", c["speedup"], ""))
+        out.append((f"sim_lower_{tag}_ms", c["lower_ms"], "one-time"))
+        for b, ms in c["batch_ms"].items():
+            out.append((f"sim_exec_{tag}_b{b}_ms", ms, "batched dispatch"))
+        if c["batch8_over_batch1"] is not None:
+            out.append((f"sim_batch8_cost_{tag}_x", c["batch8_over_batch1"],
+                        "<4x = sublinear"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, note in rows():
+        print(f"{name},{val:.4g},{note}")

@@ -1,2 +1,26 @@
-# CIM simulators: functional (meta-op flow -> numerics) and performance
-# (cycles / peak power), per §4.1 of the paper.
+# CIM simulators, per §4.1 of the paper: functional (meta-op flow ->
+# numerics, op-by-op oracle interpreter + trace-lowered batched
+# executor) and performance (cycles / peak power).
+#
+# Exports resolve lazily (PEP 562) so importing cimsim.perf from DSE
+# worker processes does not pull in jax (kernels load on first use).
+_EXPORTS = {
+    "FunctionalSimulator": ".functional",
+    "VerifyReport": ".functional",
+    "compile_and_verify": ".functional",
+    "simulate": ".functional",
+    "ExecutorStats": ".executor",
+    "LoweredExecutable": ".executor",
+    "LoweringError": ".executor",
+    "lower": ".executor",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(_EXPORTS[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

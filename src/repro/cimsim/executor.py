@@ -1,0 +1,553 @@
+"""Trace-lowered batched executor for compiled meta-operator flows.
+
+The op-by-op interpreter (cimsim.functional.FunctionalSimulator) walks
+the expanded Program in Python, dispatching one jnp oracle call per
+crossbar tile with a host<->device round-trip each time.  This module
+lowers a compiled ``(SchedulePlan, Program)`` **once** into a flat
+jitted executable with the same bit-exact semantics:
+
+  * ``cim.write_xb`` / ``cim.write_row`` become ahead-of-time weight
+    packing: every node's crossbar tiles are sliced out of the weight
+    matrix, offset-encoded, and stacked into device-resident arrays
+    (``pack``);
+  * all ``cim.read_xb`` / ``cim.read_row`` / ``cim.read_core`` ops of a
+    node collapse into batched MVM invocations — tiles ride the leading
+    tile axis of ``kernels.cim_mvm.cim_mvm_tiles`` (saturating-ADC
+    configs), or the whole node folds into a single int32 matmul (the
+    provably-exact ADC case);
+  * ``shift_acc``, requantization and the DCOM operators are traced
+    into the same jnp graph (rare float-reference ops run through
+    ``jax.pure_callback`` so they stay bit-identical to the NumPy
+    reference);
+  * every tensor carries a leading batch axis, so N inferences execute
+    in one dispatch (``run_batch``).
+
+Lowering is cached process-wide, keyed by the *content* of the compile
+(``compiler.compile_key_for_plan``) x the crossbar compute params — a
+calibration loop or verification sweep pays tracing once.  Weights and
+requantization shifts are runtime inputs, not baked constants: the same
+executable serves any weight set (re-``pack``) and any shift table.
+
+The interpreter remains the bit-exact oracle; tests sweep the executor
+against it across chip modes, saturating-ADC configs and batch sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.abstraction import CIMArch
+from ..core.cg_opt import OpPlacement, SchedulePlan
+from ..core.graph import Graph, Node, weight_matrix_shape
+from ..core.mop import Program
+from ..kernels.cim_mvm import CimMvmParams, cim_mvm_params, cim_mvm_tiles
+from .functional import (_float_dcom, chunk_offsets, spread_slice,
+                         tile_ranges)
+
+_INT32_MAX = 2 ** 31 - 1
+
+#: largest weight-matrix R for which the exact-ADC path may use the
+#: split-plane f32 GEMM: per-plane |partial| <= R * 128 * 15 must stay
+#: under 2^24 (the f32 exact-integer range), so R <= 8192 is safe.
+_F32_SPLIT_MAX_R = 8192
+
+#: DCOM graph ops the lowering can trace (parity with apply_dcom).
+_SUPPORTED_DCOM = {
+    "Relu", "Add", "Mul", "MaxPool", "AveragePool", "GlobalAveragePool",
+    "Flatten", "Reshape", "Identity", "Transpose", "Concat", "Split",
+    "MatMul", "Gelu", "Silu", "Sigmoid", "Tanh", "Softmax", "LayerNorm",
+    "RMSNorm",
+}
+
+#: ops whose lowering consumes a calibrated requantization shift
+_SHIFTED_DCOM = {"Add", "Mul", "MatMul"}
+
+
+class LoweringError(ValueError):
+    """The program cannot be trace-lowered bit-exactly (unsupported op
+    or int32 overflow risk); callers should fall back to the
+    interpreter."""
+
+
+@dataclasses.dataclass
+class ExecutorStats:
+    """Lowering statistics (shape of the flattened program)."""
+
+    cim_nodes: int = 0
+    dcom_nodes: int = 0
+    units: int = 0          # crossbar read units folded into dispatches
+    dispatches: int = 0     # batched MVM invocations in the traced graph
+    matmul_nodes: int = 0   # exact-ADC nodes lowered to one int matmul
+
+    @property
+    def cim_reads(self) -> int:   # SimStats-compatible accessor
+        return self.units
+
+
+@dataclasses.dataclass(frozen=True)
+class _Bucket:
+    """Same-shaped crossbar tiles of one node, batched into one call."""
+
+    spans: Tuple[Tuple[int, int, int, int], ...]   # (r0, r1, c0, c1) per tile
+    r_len: int
+    c_len: int
+
+    @property
+    def key(self) -> str:
+        return f"{self.r_len}x{self.c_len}"
+
+
+@dataclasses.dataclass
+class _CimPlan:
+    """Static lowering of one CIM node."""
+
+    node: Node
+    r: int
+    c: int
+    exact: bool                      # single-matmul path (ADC never clips)
+    buckets: List[_Bucket]
+    vector_in: bool                  # unbatched input was 1-D
+    conv_out: Optional[Tuple[int, int, int]] = None   # (cout, oh, ow)
+    im2col_idx: Optional[np.ndarray] = None           # (M, C*k*k) gather
+    pad: int = 0
+
+
+def _im2col_indices(cin: int, h: int, w: int, k: int, stride: int,
+                    pad: int) -> np.ndarray:
+    """Gather indices turning a flattened padded (C,Hp,Wp) image into the
+    (H_out*W_out, C*k*k) patch matrix of functional.im2col."""
+    hp, wp = h + 2 * pad, w + 2 * pad
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    ci, di, dj = np.meshgrid(np.arange(cin), np.arange(k), np.arange(k),
+                             indexing="ij")
+    patch = (ci * hp * wp + di * wp + dj).reshape(-1)        # (C*k*k,)
+    ii, jj = np.meshgrid(np.arange(oh) * stride, np.arange(ow) * stride,
+                         indexing="ij")
+    base = (ii * wp + jj).reshape(-1)                        # (OH*OW,)
+    return (base[:, None] + patch[None, :]).astype(np.int32)
+
+
+def _pool_indices(h: int, w: int, k: int, stride: int, pad: int
+                  ) -> np.ndarray:
+    """(OH*OW, k*k) gather indices into a flattened padded (Hp,Wp) map."""
+    wp = w + 2 * pad
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    di, dj = np.meshgrid(np.arange(k), np.arange(k), indexing="ij")
+    win = (di * wp + dj).reshape(-1)
+    ii, jj = np.meshgrid(np.arange(oh) * stride, np.arange(ow) * stride,
+                         indexing="ij")
+    base = (ii * wp + jj).reshape(-1)
+    return (base[:, None] + win[None, :]).astype(np.int32)
+
+
+def _collect_units(program: Program, placements: Dict[Tuple[str, int],
+                                                      OpPlacement],
+                   graph: Graph, arch: CIMArch
+                   ) -> Dict[str, List[Tuple[int, int, int, int]]]:
+    """Walk the (possibly Loop-compressed) program once and resolve every
+    distinct crossbar read into a weight-matrix span (r0, r1, c0, c1).
+
+    Copies and windows are emission-side parallelism: every copy reads
+    the same tiles and each window row is handled by exactly one copy,
+    so the executor applies each distinct unit to *all* window rows.
+    """
+    seen: Dict[Tuple, None] = {}
+    for op in program.walk(expand_loops=False):
+        k = op.kind
+        if k == "cim.read_core":
+            seen.setdefault(("core", op.attrs["node"],
+                             op.attrs.get("chunk", 0)))
+        elif k in ("cim.read_xb", "cim.read_row"):
+            a = op.attrs
+            seen.setdefault((k, a["op"], a.get("chunk", 0),
+                             a.get("row_tile", 0), a.get("col_tile", 0),
+                             a.get("spread", 0)))
+    units: Dict[str, List[Tuple[int, int, int, int]]] = {}
+    for key in seen:
+        if key[0] == "core":
+            _, name, chunk = key
+            node = graph.node(name)
+            p = placements[(name, chunk)]
+            total_r, total_c = weight_matrix_shape(node)
+            ro, co = chunk_offsets(node, p)
+            span = (ro, min(ro + p.mapping.r, total_r),
+                    co, min(co + p.mapping.c, total_c))
+        else:
+            kind, name, chunk, rt, ct, spread = key
+            node = graph.node(name)
+            p = placements[(name, chunk)]
+            total_r, total_c = weight_matrix_shape(node)
+            r0, r1, c0, c1 = tile_ranges(p, arch, rt, ct)
+            ro, co = chunk_offsets(node, p)
+            r_lo, r_hi = ro + r0, min(ro + r1, total_r)
+            c_lo, c_hi = co + c0, min(co + c1, total_c)
+            if r_hi <= r_lo or c_hi <= c_lo:
+                continue
+            if kind == "cim.read_row" and p.row_spread > 1:
+                ss = spread_slice(r_hi - r_lo, arch.xb.parallel_row,
+                                  p.row_spread, spread)
+                if ss is None:
+                    continue
+                r_lo, r_hi = r_lo + ss[0], r_lo + ss[1]
+            span = (r_lo, r_hi, c_lo, c_hi)
+        if span[1] > span[0] and span[3] > span[2]:
+            units.setdefault(name, []).append(span)
+    return units
+
+
+class LoweredExecutable:
+    """One compiled program, trace-lowered to a jitted batched function.
+
+    Construction is pure analysis (no tracing); jax traces lazily on the
+    first ``run``/``run_batch`` per batch shape.  Weights enter through
+    ``pack`` (ahead-of-time tile packing) and shifts are per-call scalar
+    inputs, so neither forces a re-trace.
+    """
+
+    def __init__(self, plan: SchedulePlan, program: Program,
+                 params: Optional[CimMvmParams] = None, *,
+                 use_kernel: bool = False, interpret: bool = True):
+        import jax
+        self.plan = plan
+        self.graph: Graph = plan.graph
+        self.arch: CIMArch = plan.arch
+        self.params = params or cim_mvm_params(plan.arch)
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.stats = ExecutorStats()
+        self._ox = 1 << (self.params.act_bits - 1)
+        self._ow = 1 << (self.params.weight_bits - 1)
+
+        unsupported = sorted({n.op_type for n in self.graph.nodes
+                              if not n.is_cim
+                              and n.op_type not in _SUPPORTED_DCOM})
+        if unsupported:
+            raise LoweringError(f"no bit-exact lowering for {unsupported}")
+
+        placements = {(p.node.name, p.chunk): p for p in plan.placements}
+        units = _collect_units(program, placements, self.graph, self.arch)
+        self._plans: Dict[str, _CimPlan] = {}
+        for node in self.graph.cim_nodes:
+            self._plans[node.name] = self._lower_cim_node(node,
+                                                          units.get(node.name))
+        self._pool_idx: Dict[str, np.ndarray] = {}
+        for node in self.graph.nodes:
+            if node.op_type in ("MaxPool", "AveragePool"):
+                _, h, w = self.graph.shapes[node.inputs[0]]
+                k = node.attrs.get("kernel", 2)
+                self._pool_idx[node.name] = _pool_indices(
+                    h, w, k, node.attrs.get("stride", k),
+                    node.attrs.get("pad", 0))
+            if not node.is_cim:
+                self.stats.dcom_nodes += 1
+        self._shift_names = sorted(
+            [n.name for n in self.graph.nodes
+             if n.is_cim or n.op_type in _SHIFTED_DCOM])
+        self._jit = jax.jit(self._forward)
+
+    # -- lowering ---------------------------------------------------------
+    def _lower_cim_node(self, node: Node,
+                        spans: Optional[Sequence[Tuple[int, int, int, int]]]
+                        ) -> _CimPlan:
+        total_r, total_c = weight_matrix_shape(node)
+        if not spans:
+            raise LoweringError(f"{node.name}: no crossbar reads emitted")
+        covered = sum((r1 - r0) * (c1 - c0) for r0, r1, c0, c1 in spans)
+        if covered != total_r * total_c:
+            raise LoweringError(
+                f"{node.name}: crossbar reads cover {covered} weight cells, "
+                f"expected {total_r * total_c}")
+        # int32 headroom: the signed accumulator is bounded by R*2^(ab+wb-2)
+        # and each unit's unsigned partial by r_u*(2^ab-1)*(2^wb-1)
+        ab, wb = self.params.act_bits, self.params.weight_bits
+        max_r_u = max(r1 - r0 for r0, r1, _, _ in spans)
+        if (total_r << (ab + wb - 2)) > _INT32_MAX or \
+                max_r_u * ((1 << ab) - 1) * ((1 << wb) - 1) > _INT32_MAX:
+            raise LoweringError(f"{node.name}: accumulation exceeds int32")
+
+        by_shape: Dict[Tuple[int, int], List[Tuple[int, int, int, int]]] = {}
+        for span in sorted(spans):
+            r0, r1, c0, c1 = span
+            by_shape.setdefault((r1 - r0, c1 - c0), []).append(span)
+        buckets = [_Bucket(spans=tuple(group), r_len=rl, c_len=cl)
+                   for (rl, cl), group in sorted(by_shape.items())]
+
+        exact = self.params.exact
+        self.stats.cim_nodes += 1
+        self.stats.units += len(spans)
+        self.stats.dispatches += 1 if exact else len(buckets)
+        self.stats.matmul_nodes += int(exact)
+
+        cp = _CimPlan(node=node, r=total_r, c=total_c, exact=exact,
+                      buckets=buckets,
+                      vector_in=len(self.graph.shapes[node.inputs[0]]) == 1)
+        if node.op_type == "Conv":
+            cin, h, w = self.graph.shapes[node.inputs[0]]
+            k = node.attrs["weight_shape"][2]
+            cp.pad = node.attrs.get("pad", 0)
+            cp.im2col_idx = _im2col_indices(cin, h, w, k,
+                                            node.attrs.get("stride", 1),
+                                            cp.pad)
+            cout = node.attrs["weight_shape"][0]
+            oh, ow = self.graph.shapes[node.outputs[0]][1:]
+            cp.conv_out = (cout, oh, ow)
+        return cp
+
+    # -- weight packing ---------------------------------------------------
+    def pack(self, weights: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        """Ahead-of-time weight programming: the ``cim.write_*`` ops.
+
+        Exact-ADC nodes keep their signed (R, C) matrix; saturating
+        configs get offset-encoded tile stacks plus the rank-1 column
+        sums of the digital offset correction.
+        """
+        import jax.numpy as jnp
+        packed: Dict[str, Any] = {}
+        for name, cp in self._plans.items():
+            w = np.asarray(weights[name], np.int32)
+            if w.shape != (cp.r, cp.c):
+                raise ValueError(f"{name}: weights {w.shape} != "
+                                 f"{(cp.r, cp.c)}")
+            if cp.exact:
+                if cp.r <= _F32_SPLIT_MAX_R and self.params.act_bits <= 8 \
+                        and self.params.weight_bits <= 8:
+                    # split-plane GEMM: w = 16*w_hi + w_lo with w_hi in
+                    # [-8,7], w_lo in [0,15]; each f32 partial product sum
+                    # stays under 2^24 so the fast float GEMM is exact
+                    packed[name] = {"hi": jnp.asarray((w >> 4), jnp.float32),
+                                    "lo": jnp.asarray((w & 15), jnp.float32)}
+                else:
+                    packed[name] = {"w": jnp.asarray(w)}
+                continue
+            entry: Dict[str, Any] = {}
+            for b in cp.buckets:
+                tiles = np.stack([w[r0:r1, c0:c1]
+                                  for r0, r1, c0, c1 in b.spans])
+                w_u = tiles + self._ow                       # unsigned
+                entry[b.key] = {
+                    "w": jnp.asarray(w_u),
+                    "sw": jnp.asarray(w_u.sum(axis=1, keepdims=True,
+                                              dtype=np.int32)),
+                }
+            packed[name] = entry
+        return packed
+
+    # -- execution --------------------------------------------------------
+    def run(self, inputs: Dict[str, np.ndarray],
+            weights: Optional[Dict[str, np.ndarray]] = None,
+            shifts: Optional[Dict[str, int]] = None, *,
+            packed: Optional[Dict[str, Any]] = None
+            ) -> Dict[str, np.ndarray]:
+        """One inference on unbatched inputs (batch axis added/stripped)."""
+        batched = {k: np.asarray(v)[None] for k, v in inputs.items()}
+        out = self.run_batch(batched, weights, shifts, packed=packed)
+        return {k: v[0] for k, v in out.items()}
+
+    def run_batch(self, inputs: Dict[str, np.ndarray],
+                  weights: Optional[Dict[str, np.ndarray]] = None,
+                  shifts: Optional[Dict[str, int]] = None, *,
+                  packed: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, np.ndarray]:
+        """N inferences in one dispatch: every input carries a leading
+        batch axis.  Pass ``packed=self.pack(weights)`` to amortize
+        weight packing across calls."""
+        import jax.numpy as jnp
+        if packed is None:
+            if weights is None:
+                raise ValueError("need weights=... or packed=...")
+            packed = self.pack(weights)
+        shifts = shifts or {}
+        sh = {name: jnp.int32(shifts.get(name, 0))
+              for name in self._shift_names}
+        xs = {name: jnp.asarray(np.asarray(v), jnp.int32)
+              for name, v in inputs.items()}
+        out = self._jit(packed, sh, xs)
+        return {name: np.asarray(v) for name, v in out.items()}
+
+    # -- the traced program ----------------------------------------------
+    def _forward(self, packed, shifts, inputs):
+        tensors: Dict[str, Any] = dict(inputs)
+        for node in self.graph.nodes:
+            xs = [tensors[t] for t in node.inputs]
+            if node.is_cim:
+                tensors[node.outputs[0]] = self._cim(node, xs[0],
+                                                     packed[node.name],
+                                                     shifts[node.name])
+            elif node.op_type == "Split":
+                for name, part in zip(node.outputs,
+                                      self._split(node, xs[0])):
+                    tensors[name] = part
+            else:
+                tensors[node.outputs[0]] = self._dcom(node, xs, shifts)
+        return {t: tensors[t] for t in self.graph.outputs}
+
+    def _rows(self, node: Node, x):
+        """(N, windows, R) MVM input rows (im2col for Conv)."""
+        import jax.numpy as jnp
+        cp = self._plans[node.name]
+        if node.op_type == "Conv":
+            n = x.shape[0]
+            p = cp.pad
+            if p:
+                x = jnp.pad(x, ((0, 0), (0, 0), (p, p), (p, p)))
+            return x.reshape(n, -1)[:, cp.im2col_idx]
+        return x[:, None, :] if cp.vector_in else x
+
+    def _cim(self, node: Node, x, pw, sh):
+        import jax.numpy as jnp
+        cp = self._plans[node.name]
+        rows = self._rows(node, x)                     # (N, M, R)
+        n, m, _ = rows.shape
+        if cp.exact:
+            if "hi" in pw:
+                xf = rows.astype(jnp.float32)
+                acc = ((xf @ pw["hi"]).astype(jnp.int32) << 4) \
+                    + (xf @ pw["lo"]).astype(jnp.int32)
+            else:
+                acc = jnp.matmul(rows, pw["w"],
+                                 preferred_element_type=jnp.int32)
+        else:
+            flat = (rows + self._ox).reshape(n * m, cp.r)
+            acc = jnp.zeros((n * m, cp.c), jnp.int32)
+            for b in cp.buckets:
+                rows_idx = np.stack([np.arange(r0, r1, dtype=np.int32)
+                                     for r0, r1, _, _ in b.spans])
+                xt = jnp.moveaxis(flat[:, rows_idx], 1, 0)  # (T, NM, r_len)
+                y_u = cim_mvm_tiles(xt, pw[b.key]["w"], self.params,
+                                    use_kernel=self.use_kernel,
+                                    interpret=self.interpret)
+                sx = xt.sum(-1, keepdims=True)
+                y = (y_u - self._ow * sx - self._ox * pw[b.key]["sw"]
+                     + b.r_len * self._ox * self._ow)
+                col_idx = np.concatenate(
+                    [np.arange(c0, c1, dtype=np.int32)
+                     for _, _, c0, c1 in b.spans])
+                acc = acc.at[:, col_idx].add(
+                    jnp.moveaxis(y, 0, 1).reshape(n * m, -1))
+            acc = acc.reshape(n, m, cp.c)
+        y = jnp.clip(acc >> sh, -128, 127).astype(jnp.int32)
+        if cp.conv_out is not None:
+            cout, oh, ow = cp.conv_out
+            return y.transpose(0, 2, 1).reshape(n, cout, oh, ow)
+        if cp.vector_in:
+            return y[:, 0]
+        return y
+
+    def _split(self, node: Node, x):
+        import jax.numpy as jnp
+        axis = node.attrs.get("axis", -1) % (x.ndim - 1) + 1
+        parts = node.attrs["parts"]
+        return jnp.split(x, np.cumsum(parts[:-1]), axis=axis)
+
+    def _pool(self, node: Node, x, reduce_max: bool):
+        import jax.numpy as jnp
+        k = node.attrs.get("kernel", 2)
+        pad = node.attrs.get("pad", 0)
+        n, c = x.shape[0], x.shape[1]
+        if pad:
+            fill = -(2 ** 31) if reduce_max else 0
+            x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)),
+                        constant_values=fill)
+        win = x.reshape(n, c, -1)[:, :, self._pool_idx[node.name]]
+        if reduce_max:
+            red = win.max(axis=-1)
+        else:
+            red = jnp.floor_divide(win.sum(axis=-1), k * k)
+        oh, ow = self.graph.shapes[node.outputs[0]][1:]
+        return red.reshape(n, c, oh, ow)
+
+    def _dcom(self, node: Node, xs: List, shifts):
+        import jax
+        import jax.numpy as jnp
+        t = node.op_type
+        if t == "Relu":
+            return jnp.maximum(xs[0], 0)
+        if t in ("Add", "Mul"):
+            y = xs[0] + xs[1] if t == "Add" else xs[0] * xs[1]
+            return jnp.clip(y >> shifts[node.name], -128, 127) \
+                .astype(jnp.int32)
+        if t == "MaxPool":
+            return self._pool(node, xs[0], reduce_max=True)
+        if t == "AveragePool":
+            return self._pool(node, xs[0], reduce_max=False)
+        if t == "GlobalAveragePool":
+            hw = xs[0].shape[2] * xs[0].shape[3]
+            return jnp.floor_divide(
+                xs[0].sum(axis=(2, 3), keepdims=True), hw).astype(jnp.int32)
+        if t == "Flatten":
+            return xs[0].reshape(xs[0].shape[0], -1)
+        if t == "Reshape":
+            return xs[0].reshape((xs[0].shape[0],)
+                                 + tuple(node.attrs["shape"]))
+        if t == "Identity":
+            return xs[0]
+        if t == "Transpose":
+            perm = (0,) + tuple(q + 1 for q in node.attrs["perm"])
+            return jnp.transpose(xs[0], perm)
+        if t == "Concat":
+            axis = node.attrs.get("axis", -1)
+            return jnp.concatenate(xs, axis if axis < 0 else axis + 1)
+        if t == "MatMul":
+            b = xs[1]
+            if node.attrs.get("transpose_b"):
+                b = jnp.swapaxes(b, -1, -2)
+            y = jnp.matmul(xs[0], b, preferred_element_type=jnp.int32)
+            return jnp.clip(y >> shifts[node.name], -128, 127) \
+                .astype(jnp.int32)
+        # float-reference ops: the NumPy float64 path is the contract, so
+        # call it (batch-transparent: elementwise / last-axis only)
+        x = xs[0]
+
+        def cb(xv):
+            y = _float_dcom(t, [np.asarray(xv)], node)
+            return np.clip(np.round(y * 32.0), -128, 127).astype(np.int32)
+
+        return jax.pure_callback(
+            cb, jax.ShapeDtypeStruct(x.shape, jnp.int32), x)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide lowering cache
+# ---------------------------------------------------------------------------
+
+_LOWER_CACHE: "OrderedDict[Tuple, LoweredExecutable]" = OrderedDict()
+_LOWER_CACHE_MAX = 32
+
+
+def clear_lower_cache() -> None:
+    _LOWER_CACHE.clear()
+
+
+def lower(plan: SchedulePlan, program: Program,
+          params: Optional[CimMvmParams] = None, *,
+          use_kernel: bool = False, interpret: bool = True,
+          cache: bool = True) -> LoweredExecutable:
+    """Lower a compiled ``(plan, program)`` to a batched executable.
+
+    Cached process-wide by ``compile_key_for_plan(plan) x params`` (plus
+    the kernel-routing flags), so repeated lowerings of the same compile
+    config — calibration loops, verification sweeps, serving restarts —
+    reuse the traced executable and its jit cache.
+    """
+    from ..core import compiler
+    params = params or cim_mvm_params(plan.arch)
+    key = None
+    if cache:
+        key = (compiler.compile_key_for_plan(plan), params, use_kernel,
+               interpret)
+        hit = _LOWER_CACHE.get(key)
+        if hit is not None:
+            _LOWER_CACHE.move_to_end(key)
+            return hit
+    exe = LoweredExecutable(plan, program, params, use_kernel=use_kernel,
+                            interpret=interpret)
+    if key is not None:
+        _LOWER_CACHE[key] = exe
+        while len(_LOWER_CACHE) > _LOWER_CACHE_MAX:
+            _LOWER_CACHE.popitem(last=False)
+    return exe

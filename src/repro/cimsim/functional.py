@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -56,12 +57,18 @@ def pick_shift(y32: np.ndarray) -> int:
 
 def make_weights(graph: Graph, seed: int = 0,
                  bits: int = 8) -> Dict[str, np.ndarray]:
-    """Deterministic signed int weights (R, C) per CIM node."""
+    """Deterministic signed int weights (R, C) per CIM node.
+
+    Seeded with a stable digest of ``(node name, seed)`` — ``hash()`` of
+    a str is salted per process, which would silently break cross-process
+    reproducibility and any cache keyed on weight content.
+    """
     out = {}
     lo, hi = -(1 << (bits - 1)), (1 << (bits - 1))
     for node in graph.cim_nodes:
         r, c = weight_matrix_shape(node)
-        rng = np.random.default_rng(abs(hash((node.name, seed))) % (2 ** 32))
+        rng = np.random.default_rng(
+            zlib.crc32(f"{node.name}\x00{seed}".encode()))
         out[node.name] = rng.integers(lo, hi, (r, c)).astype(np.int32)
     return out
 
@@ -243,6 +250,80 @@ def _store_outputs(tensors: Dict[str, np.ndarray], node: Node, y) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Crossbar tile geometry + signed MVM semantics, shared by the op-by-op
+# interpreter (below) and the trace-lowered batched executor
+# (cimsim.executor) — both must address the same weight sub-matrices.
+# ---------------------------------------------------------------------------
+
+def tile_ranges(p: OpPlacement, arch: CIMArch, rt: int, ct: int
+                ) -> Tuple[int, int, int, int]:
+    """Row/col index ranges of tile (rt, ct) of a chunk's sub-matrix."""
+    m = p.mapping
+    r0 = rt * arch.xb.rows
+    r1 = min(r0 + arch.xb.rows, m.r)
+    cpx = logical_cols_per_xb(m, arch)
+    c0 = ct * cpx
+    c1 = min(c0 + cpx, m.c)
+    return r0, r1, c0, c1
+
+
+def chunk_offsets(node: Node, p: OpPlacement) -> Tuple[int, int]:
+    """Global (row, col) offset of a chunk inside the full matrix."""
+    r, c = weight_matrix_shape(node)
+    sub_r, sub_c = p.mapping.r, p.mapping.c
+    cc = math.ceil(c / sub_c)
+    ci, ri = p.chunk % cc, p.chunk // cc
+    return ri * sub_r, ci * sub_c
+
+
+def spread_slice(rows_in_tile: int, parallel_row: int, row_spread: int,
+                 part: int) -> Optional[Tuple[int, int]]:
+    """Row sub-span [s0, s1) of spread ``part`` under the VVM remap, or
+    ``None`` when the part falls past the tile's rows."""
+    n_grp = max(1, math.ceil(rows_in_tile / parallel_row))
+    per = math.ceil(n_grp / row_spread) * parallel_row
+    s0 = part * per
+    if s0 >= rows_in_tile:
+        return None
+    return s0, min(s0 + per, rows_in_tile)
+
+
+def signed_oracle_mvm(x_rows: np.ndarray, w: np.ndarray,
+                      p: CimMvmParams) -> np.ndarray:
+    """Signed MVM through the crossbar oracle via offset encoding.
+
+    The standard CIM trick shared by the interpreter, the executor and
+    the saturating-ADC reference: store ``x + 2^(ab-1)`` / ``w + 2^(wb-1)``
+    unsigned, run the bit-sliced ADC-saturating oracle, subtract the
+    rank-1 correction digitally.
+    """
+    import jax.numpy as jnp
+    ox = 1 << (p.act_bits - 1)
+    ow = 1 << (p.weight_bits - 1)
+    x_u = x_rows.astype(np.int64) + ox
+    w_u = w.astype(np.int64) + ow
+    y_u = np.asarray(kref.cim_mvm_ref(
+        jnp.asarray(x_u, jnp.int32), jnp.asarray(w_u, jnp.int32),
+        act_bits=p.act_bits, weight_bits=p.weight_bits,
+        dac_bits=p.dac_bits, cell_bits=p.cell_bits,
+        parallel_row=p.parallel_row, adc_bits=p.adc_bits)).astype(np.int64)
+    r = x_rows.shape[-1]
+    sx = x_u.sum(axis=-1, keepdims=True)
+    sw = w_u.sum(axis=0, keepdims=True)
+    return y_u - ow * sx - ox * sw + r * ox * ow
+
+
+def reference_mvm(params: CimMvmParams):
+    """The MVM the int8 reference must use for these crossbar params:
+    ``None`` (exact integer matmul) when the ADC provably never
+    saturates, else the offset-encoded oracle — so calibration,
+    simulation and verification all share one dispatch rule."""
+    if params.exact:
+        return None
+    return lambda x_rows, w: signed_oracle_mvm(x_rows, w, params)
+
+
+# ---------------------------------------------------------------------------
 # The meta-operator flow interpreter
 # ---------------------------------------------------------------------------
 
@@ -279,23 +360,10 @@ class FunctionalSimulator:
     # -- crossbar-level MVM with the CIM compute semantics ---------------
     def _cim_mvm(self, x_rows: np.ndarray, w: np.ndarray,
                  parallel_row: Optional[int] = None) -> np.ndarray:
-        import jax.numpy as jnp
         p = self.params
         if parallel_row is not None:
             p = dataclasses.replace(p, parallel_row=parallel_row)
-        ox = 1 << (p.act_bits - 1)
-        ow = 1 << (p.weight_bits - 1)
-        x_u = x_rows.astype(np.int64) + ox
-        w_u = w.astype(np.int64) + ow
-        y_u = np.asarray(kref.cim_mvm_ref(
-            jnp.asarray(x_u, jnp.int32), jnp.asarray(w_u, jnp.int32),
-            act_bits=p.act_bits, weight_bits=p.weight_bits,
-            dac_bits=p.dac_bits, cell_bits=p.cell_bits,
-            parallel_row=p.parallel_row, adc_bits=p.adc_bits)).astype(np.int64)
-        r = x_rows.shape[-1]
-        sx = x_u.sum(axis=-1, keepdims=True)
-        sw = w_u.sum(axis=0, keepdims=True)
-        return y_u - ow * sx - ox * sw + r * ox * ow
+        return signed_oracle_mvm(x_rows, w, p)
 
     # -- tensor store -----------------------------------------------------
     def _tensor(self, name: str) -> np.ndarray:
@@ -333,23 +401,10 @@ class FunctionalSimulator:
         return rows
 
     def _tile_ranges(self, p: OpPlacement, rt: int, ct: int):
-        """Row/col index ranges of tile (rt, ct) of a chunk's sub-matrix."""
-        arch = self.arch
-        m = p.mapping
-        r0 = rt * arch.xb.rows
-        r1 = min(r0 + arch.xb.rows, m.r)
-        cpx = logical_cols_per_xb(m, arch)
-        c0 = ct * cpx
-        c1 = min(c0 + cpx, m.c)
-        return r0, r1, c0, c1
+        return tile_ranges(p, self.arch, rt, ct)
 
     def _chunk_offsets(self, node: Node, p: OpPlacement):
-        """Global (row, col) offset of a chunk inside the full matrix."""
-        r, c = weight_matrix_shape(node)
-        sub_r, sub_c = p.mapping.r, p.mapping.c
-        cc = math.ceil(c / sub_c)
-        ci, ri = p.chunk % cc, p.chunk // cc
-        return ri * sub_r, ci * sub_c
+        return chunk_offsets(node, p)
 
     # -- execution ---------------------------------------------------------
     def run(self, inputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
@@ -438,14 +493,11 @@ class FunctionalSimulator:
             return
         xr0, xr1 = ro + r0, ro + r0 + wsub.shape[0]
         if wlm and p.row_spread > 1:
-            part = a.get("spread", 0)
-            pr = self.arch.xb.parallel_row
-            n_grp = max(1, math.ceil(wsub.shape[0] / pr))
-            per = math.ceil(n_grp / p.row_spread) * pr
-            s0 = part * per
-            s1 = min(s0 + per, wsub.shape[0])
-            if s0 >= wsub.shape[0]:
+            span = spread_slice(wsub.shape[0], self.arch.xb.parallel_row,
+                                p.row_spread, a.get("spread", 0))
+            if span is None:
                 return
+            s0, s1 = span
             wsub = wsub[s0:s1]
             xr0, xr1 = xr0 + s0, xr0 + (s1 - s0) + s0
         y = self._cim_mvm(rows[windows][:, xr0:xr1], wsub)
@@ -453,35 +505,131 @@ class FunctionalSimulator:
         acc[np.ix_(windows, cols)] += y
 
 
+def calibrate_shifts(graph: Graph, weights: Dict[str, np.ndarray],
+                     inputs: Dict[str, np.ndarray],
+                     params: CimMvmParams) -> Dict[str, int]:
+    """Requantization shifts from one reference calibration pass (the
+    reference shares the crossbar compute semantics when the ADC can
+    saturate, so calibration sees the hardware-true dynamic range)."""
+    _, shifts = reference_forward(graph, weights, inputs,
+                                  mvm=reference_mvm(params))
+    return shifts
+
+
 def simulate(graph: Graph, arch: CIMArch, *, level=None, seed: int = 0,
-             params: Optional[CimMvmParams] = None):
-    """Compile ``graph`` for ``arch``, run the reference, interpret the
-    meta-op flow, and return (sim_outputs, ref_outputs, stats)."""
+             params: Optional[CimMvmParams] = None,
+             use_executor: bool = False):
+    """Compile ``graph`` for ``arch``, run the reference, execute the
+    meta-op flow, and return (sim_outputs, ref_outputs, stats).
+
+    ``use_executor=True`` runs the trace-lowered batched executor
+    (cimsim.executor) instead of the op-by-op interpreter — same
+    semantics, one jitted dispatch (stats are then lowering stats).
+    """
     from ..core import compiler
     weights = make_weights(graph, seed)
     inputs = make_input(graph, seed)
     p = params or cim_mvm_params(arch)
 
-    def mvm(x_rows, w):
-        # reference shares the crossbar compute semantics (incl. ADC)
-        import jax.numpy as jnp
-        ox = 1 << (p.act_bits - 1)
-        ow = 1 << (p.weight_bits - 1)
-        y_u = np.asarray(kref.cim_mvm_ref(
-            jnp.asarray(x_rows + ox, jnp.int32), jnp.asarray(w + ow, jnp.int32),
-            act_bits=p.act_bits, weight_bits=p.weight_bits,
-            dac_bits=p.dac_bits, cell_bits=p.cell_bits,
-            parallel_row=p.parallel_row, adc_bits=p.adc_bits)).astype(np.int64)
-        sx = (x_rows.astype(np.int64) + ox).sum(-1, keepdims=True)
-        sw = (w.astype(np.int64) + ow).sum(0, keepdims=True)
-        return y_u - ow * sx - ox * sw + x_rows.shape[-1] * ox * ow
-
-    ref_mvm = mvm if not p.exact else None
+    ref_mvm = reference_mvm(p)
     _, shifts = reference_forward(graph, weights, inputs, mvm=ref_mvm)
     ref_out, _ = reference_forward(graph, weights, inputs, shifts=shifts,
                                    mvm=ref_mvm)
-    res = compiler.compile_graph(graph, arch, level=level, expand=True)
+    if use_executor:
+        from .executor import lower
+        res = compiler.compile_graph(graph, arch, level=level)
+        exe = lower(res.plan, res.program, params=p)
+        sim_out = exe.run(inputs, weights, shifts)
+        stats = exe.stats
+    else:
+        res = compiler.compile_graph(graph, arch, level=level, expand=True)
+        sim = FunctionalSimulator(res.plan, res.program, weights, shifts,
+                                  params=p)
+        sim_out = sim.run(inputs)
+        stats = sim.stats
+    return sim_out, {t: ref_out[t] for t in graph.outputs}, stats
+
+
+@dataclasses.dataclass
+class VerifyReport:
+    """Outcome of one functional verification (§4.1) of a compile."""
+
+    graph: str
+    arch: str
+    batch: int
+    max_abs_err: Dict[str, int]          # per graph output
+    lower_s: float = 0.0
+    run_s: float = 0.0
+    #: set when verification could not run at all (compile/lowering
+    #: failure) — ``max_abs_err`` is then empty and ``ok`` is False
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None and \
+            all(e == 0 for e in self.max_abs_err.values())
+
+
+def compile_and_verify(graph: Graph, arch: CIMArch, *, level=None,
+                       seed: int = 0, batch: int = 1,
+                       params: Optional[CimMvmParams] = None,
+                       use_executor: bool = True,
+                       **compile_kwargs) -> VerifyReport:
+    """Compile ``graph`` for ``arch`` and verify the emitted flow against
+    the int8 fake-quant reference on ``batch`` random inputs.
+
+    The fast path (default) lowers the compiled program once with the
+    batched executor and verifies all inputs in a single dispatch; a
+    flow the executor cannot lower bit-exactly (``LoweringError``)
+    falls back to op-by-op interpretation, as does
+    ``use_executor=False``.  Extra keyword arguments (``use_pipeline``,
+    ``binding``, ``cache``, ...) reach ``compile_graph``, so any DSE
+    design point can be verified.
+    """
+    import time
+    from ..core import compiler
+    weights = make_weights(graph, seed)
+    p = params or cim_mvm_params(arch)
+    inputs = [make_input(graph, seed + i) for i in range(batch)]
+    ref_mvm = reference_mvm(p)
+    _, shifts = reference_forward(graph, weights, inputs[0], mvm=ref_mvm)
+    refs = [reference_forward(graph, weights, x, shifts=shifts,
+                              mvm=ref_mvm)[0] for x in inputs]
+
+    err = {t: 0 for t in graph.outputs}
+    if use_executor:
+        from .executor import LoweringError, lower
+        res = compiler.compile_graph(graph, arch, level=level,
+                                     **compile_kwargs)
+        try:
+            t0 = time.time()
+            exe = lower(res.plan, res.program, params=p)
+            packed = exe.pack(weights)
+            t1 = time.time()
+            batched = {name: np.stack([x[name] for x in inputs])
+                       for name in graph.inputs}
+            outs = exe.run_batch(batched, packed=packed, shifts=shifts)
+            t2 = time.time()
+            for i in range(batch):
+                for t in graph.outputs:
+                    d = np.abs(np.asarray(outs[t][i], np.int64)
+                               - refs[i][t].astype(np.int64))
+                    err[t] = max(err[t], int(d.max()) if d.size else 0)
+            return VerifyReport(graph=graph.name, arch=arch.name,
+                                batch=batch, max_abs_err=err,
+                                lower_s=t1 - t0, run_s=t2 - t1)
+        except LoweringError:
+            pass       # fast path unavailable: verify op by op below
+
+    res = compiler.compile_graph(graph, arch, level=level, expand=True,
+                                 **compile_kwargs)
     sim = FunctionalSimulator(res.plan, res.program, weights, shifts,
                               params=p)
-    sim_out = sim.run(inputs)
-    return sim_out, {t: ref_out[t] for t in graph.outputs}, sim.stats
+    t0 = time.time()
+    for i, x in enumerate(inputs):
+        out = sim.run(x)
+        for t in graph.outputs:
+            d = np.abs(out[t].astype(np.int64) - refs[i][t].astype(np.int64))
+            err[t] = max(err[t], int(d.max()) if d.size else 0)
+    return VerifyReport(graph=graph.name, arch=arch.name, batch=batch,
+                        max_abs_err=err, run_s=time.time() - t0)

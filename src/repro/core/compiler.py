@@ -29,6 +29,12 @@ from .mop import Program
 class CompileResult:
     plan: SchedulePlan
     program: Program
+    #: content hash of the (graph, arch, knobs) config that produced this
+    #: result, as stored in the compile cache.  Note the executor cache
+    #: derives its own key via ``compile_key_for_plan`` (normalized over
+    #: expansion and salted by baseline policy) — this field is identity
+    #: metadata, not that anchor.
+    key: Optional[str] = None
 
     @property
     def text(self) -> str:
@@ -54,9 +60,10 @@ class CompileResult:
 # the full Abs-arch description and every scheduling knob.
 # ---------------------------------------------------------------------------
 
-#: bump when compiler passes change in ways that alter emitted programs,
-#: so stale cache entries from older code can never be returned.
-COMPILE_KEY_SCHEMA = 1
+#: bump when compiler passes change in ways that alter emitted programs
+#: (or when CompileResult's pickled layout changes), so stale cache
+#: entries from older code can never be returned.
+COMPILE_KEY_SCHEMA = 2
 
 _COMPILE_CACHE = None
 
@@ -100,6 +107,29 @@ def compile_key(
     }
     blob = json.dumps(payload, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def compile_key_for_plan(plan: SchedulePlan) -> str:
+    """Content key of the config a ``SchedulePlan`` was built under.
+
+    Reconstructs the knobs from the plan itself (the binding lives on the
+    placements' mappings), normalized to ``expand=False`` — program
+    expansion changes neither the schedule nor the lowered semantics, so
+    executor caches built on this key are shared across expansion modes.
+    Plans not produced by ``compile_graph`` (the §4.2 baseline policies
+    in ``core.baselines`` tag ``notes["policy"]``) get a distinct suffix:
+    their placements differ from the compiler's for the same knobs, and
+    under a saturating ADC different tilings compute different values.
+    """
+    binding = (plan.placements[0].mapping.binding if plan.placements
+               else BitBinding.B_TO_XBC)
+    key = compile_key(plan.graph, plan.arch,
+                      level=plan.notes.get("level"),
+                      use_pipeline=plan.use_pipeline,
+                      use_duplication=plan.use_duplication,
+                      binding=binding, expand=False)
+    policy = plan.notes.get("policy")
+    return f"{key}:{policy}" if policy else key
 
 
 def proxy_metrics(
@@ -223,13 +253,12 @@ def compile_graph(
             f"{level.value} interface")
 
     cache = cache if cache is not None else _COMPILE_CACHE
-    key = None
+    key = compile_key(graph, arch, level=level, use_pipeline=use_pipeline,
+                      use_duplication=use_duplication, binding=binding,
+                      expand=expand)
     if cache is not None:
-        key = compile_key(graph, arch, level=level, use_pipeline=use_pipeline,
-                          use_duplication=use_duplication, binding=binding,
-                          expand=expand)
         hit = cache.get(key)
-        if hit is not None:
+        if hit is not None:    # schema-2 entries are stored with key set
             return hit
 
     def build(ping_pong: bool) -> SchedulePlan:
@@ -261,7 +290,7 @@ def compile_graph(
 
     program = codegen.emit(plan, expand=expand)
     program.validate()
-    result = CompileResult(plan=plan, program=program)
+    result = CompileResult(plan=plan, program=program, key=key)
     if cache is not None:
         cache.put(key, result)
     return result

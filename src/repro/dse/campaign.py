@@ -48,6 +48,9 @@ class WorkloadOutcome:
     full_evals: int
     rungs: List[RungLog] = dataclasses.field(default_factory=list)
     objective: str = "latency_cycles"
+    #: functional verification of the best point (``verify_best=True``):
+    #: a cimsim.VerifyReport from the trace-lowered batched executor
+    verify: Optional[object] = None
 
     @property
     def best(self) -> Optional[SweepResult]:
@@ -163,13 +166,22 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
                  min_keep: int = 2,
                  robust_tol: float = 0.10,
                  cache: Optional[CompileCache] = None,
-                 workers: int = 1) -> CampaignResult:
+                 workers: int = 1,
+                 verify_best: bool = False,
+                 verify_batch: int = 2) -> CampaignResult:
     """Sweep every workload against ``space`` through one shared queue.
 
     ``workloads`` is a mapping ``name -> Graph``, a sequence of
     ``(name, graph)`` pairs, or a sequence of graphs (named by
     ``graph.name``).  Results are deterministic for any ``workers``
     count.
+
+    ``verify_best=True`` closes the loop the paper closes by hand
+    (§4.1): each workload's winning design point is functionally
+    verified against the int8 fake-quant reference — via the
+    trace-lowered batched executor, so the check costs one lowering plus
+    one batched dispatch of ``verify_batch`` inputs.  The report lands
+    on ``WorkloadOutcome.verify``.
     """
     wls = _as_workloads(workloads)
     points, base = resolve_space(space, base_arch)
@@ -221,6 +233,24 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
                 frontier=pareto_frontier(ok, objectives),
                 full_evals=sr.full_evals, rungs=sr.rungs,
                 objective=objective)
+
+    if verify_best:
+        from ..cimsim import VerifyReport, compile_and_verify
+        graphs = dict(wls)
+        for name, w in outcomes.items():
+            b = w.best
+            if b is None:
+                continue
+            arch_pt = b.point.arch_for(base)
+            try:
+                w.verify = compile_and_verify(
+                    graphs[name], arch_pt, batch=verify_batch,
+                    cache=cache,       # the winning compile is already here
+                    **b.point.compile_kwargs())
+            except Exception as e:   # fail-soft, like sweep evaluation
+                w.verify = VerifyReport(
+                    graph=name, arch=arch_pt.name, batch=verify_batch,
+                    max_abs_err={}, error=f"{type(e).__name__}: {e}")
 
     return CampaignResult(
         workloads=outcomes,

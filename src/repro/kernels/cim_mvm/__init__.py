@@ -1,1 +1,2 @@
-from .ops import cim_mvm, cim_mvm_params, CimMvmParams  # noqa: F401
+from .ops import (cim_mvm, cim_mvm_params, cim_mvm_signed,  # noqa: F401
+                  cim_mvm_tiles, CimMvmParams)

@@ -124,6 +124,38 @@ def cim_mvm(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
 
 @functools.partial(jax.jit, static_argnames=("params", "use_kernel",
                                              "interpret"))
+def cim_mvm_tiles(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
+                  use_kernel: bool = False,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Tile-batched unsigned crossbar MVM: (T,M,R) x (T,R,C) -> (T,M,C).
+
+    The batched entry point used by the trace-lowered executor
+    (cimsim.executor): all crossbar tiles of one operator are stacked on
+    a leading tile axis and dispatched at once instead of one
+    host->device round-trip per tile.  Every tile shares the bit-sliced,
+    parallel-row-grouped, ADC-saturating semantics of ``cim_mvm``
+    (tiles may be zero-padded along R in the unsigned domain — padding
+    preserves per-group ADC values, see ``ref.cim_mvm_ref_tiles``).
+
+    ``use_kernel=True`` routes each tile through the Pallas kernel (a
+    static trace-time loop over T — tiles become independent kernel
+    launches inside one jitted program); the default oracle path is one
+    fused einsum over the tile batch.
+    """
+    if not use_kernel:
+        return ref.cim_mvm_ref_tiles(
+            x_u, w_u, act_bits=params.act_bits,
+            weight_bits=params.weight_bits, dac_bits=params.dac_bits,
+            cell_bits=params.cell_bits, parallel_row=params.parallel_row,
+            adc_bits=params.adc_bits)
+    return jnp.stack([
+        cim_mvm(x_u[t], w_u[t], params, use_kernel=True, interpret=interpret)
+        for t in range(x_u.shape[0])
+    ])
+
+
+@functools.partial(jax.jit, static_argnames=("params", "use_kernel",
+                                             "interpret"))
 def cim_mvm_signed(x_i: jnp.ndarray, w_i: jnp.ndarray, params: CimMvmParams,
                    use_kernel: bool = True,
                    interpret: bool = True) -> jnp.ndarray:

@@ -74,6 +74,49 @@ def cim_mvm_ref(x_u: jnp.ndarray, w_u: jnp.ndarray, *, act_bits: int,
     return out
 
 
+def cim_mvm_ref_tiles(x_u: jnp.ndarray, w_u: jnp.ndarray, *, act_bits: int,
+                      weight_bits: int, dac_bits: int, cell_bits: int,
+                      parallel_row: int, adc_bits: int) -> jnp.ndarray:
+    """Tile-batched oracle: (T,M,R) uint x  @  (T,R,C) uint w -> (T,M,C).
+
+    Semantically ``stack([cim_mvm_ref(x_u[t], w_u[t]) for t in range(T)])``
+    but evaluated as one einsum per (phase, slice) pair — tiles ride the
+    batch dimension next to the parallel-row groups, so a whole node's
+    crossbar tiles execute in a single device dispatch (the executor's
+    saturating-ADC path).
+
+    Row padding is safe: a tile shorter than R can be zero-padded in the
+    *unsigned* domain — padded rows contribute 0 to every group's analog
+    sum (so the ADC sees identical values) and extra all-zero groups
+    digitize to 0.
+    """
+    t, m, r = x_u.shape
+    t2, r2, c = w_u.shape
+    assert (t, r) == (t2, r2), (x_u.shape, w_u.shape)
+    pr = min(parallel_row, r)
+    n_groups = math.ceil(r / pr)
+    pad_r = n_groups * pr - r
+    if pad_r:
+        x_u = jnp.pad(x_u, ((0, 0), (0, 0), (0, pad_r)))
+        w_u = jnp.pad(w_u, ((0, 0), (0, pad_r), (0, 0)))
+
+    xp = bit_planes(x_u, act_bits, dac_bits)          # (P, T, M, R')
+    ws = bit_planes(w_u, weight_bits, cell_bits)      # (S, T, R', C)
+    P, S = xp.shape[0], ws.shape[0]
+
+    xg = xp.reshape(P, t, m, n_groups, pr)            # (P, T, M, G, pr)
+    wg = ws.reshape(S, t, n_groups, pr, c)            # (S, T, G, pr, C)
+
+    out = jnp.zeros((t, m, c), jnp.int32)
+    for p in range(P):
+        for s in range(S):
+            part = jnp.einsum("tmgr,tgrc->tgmc", xg[p], wg[s],
+                              preferred_element_type=jnp.int32)
+            part = adc_saturate(part, adc_bits)
+            out = out + (part.sum(axis=1) << (p * dac_bits + s * cell_bits))
+    return out
+
+
 def exact_adc_bits(act_bits: int, weight_bits: int, dac_bits: int,
                    cell_bits: int, parallel_row: int) -> int:
     """Smallest ADC width that never saturates (exact integer matmul)."""

@@ -1,1 +1,2 @@
 from .server import BatchServer, Request  # noqa
+from .cim_service import CimBatchService, CimRequest, ServiceStats  # noqa

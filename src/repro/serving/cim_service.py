@@ -1,0 +1,128 @@
+"""Batched CIM inference service over a trace-lowered executor.
+
+The serving-side consumer of cimsim.executor: compile a workload for a
+CIM chip once, lower the meta-operator flow once, then serve request
+traffic by stacking queued inputs on the executor's batch axis — one
+device dispatch per batch instead of one interpreter walk per request.
+``use_executor=False`` keeps the op-by-op interpreter as a
+reference/fallback path (same outputs, orders of magnitude slower),
+which is also how the service is tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import compiler
+from ..core.abstraction import CIMArch
+from ..core.graph import Graph
+from ..kernels.cim_mvm import CimMvmParams, cim_mvm_params
+
+
+@dataclasses.dataclass
+class CimRequest:
+    rid: int
+    inputs: Dict[str, np.ndarray]            # unbatched graph inputs
+    # filled by the service:
+    outputs: Optional[Dict[str, np.ndarray]] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    serve_s: float = 0.0
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / self.serve_s if self.serve_s > 0 else 0.0
+
+
+class CimBatchService:
+    """Fixed-workload inference service with batched execution.
+
+    Weights default to the deterministic test weights and shifts to one
+    reference calibration pass (the §4.1 verification setup); production
+    embedders can pass their own ``weights``/``shifts``.
+    """
+
+    def __init__(self, graph: Graph, arch: CIMArch, *, level=None,
+                 seed: int = 0, max_batch: int = 8,
+                 params: Optional[CimMvmParams] = None,
+                 weights: Optional[Dict[str, np.ndarray]] = None,
+                 shifts: Optional[Dict[str, int]] = None,
+                 use_executor: bool = True):
+        from ..cimsim.functional import (calibrate_shifts, make_input,
+                                         make_weights)
+        self.graph = graph
+        self.arch = arch
+        self.max_batch = max_batch
+        self.use_executor = use_executor
+        self.params = params or cim_mvm_params(arch)
+        self.weights = weights if weights is not None \
+            else make_weights(graph, seed)
+        self.shifts = shifts if shifts is not None else calibrate_shifts(
+            graph, self.weights, make_input(graph, seed), self.params)
+        self.stats = ServiceStats()
+        self._warmed: set = set()        # batch sizes already jit-traced
+        if use_executor:
+            from ..cimsim.executor import LoweringError, lower
+            res = compiler.compile_graph(graph, arch, level=level)
+            try:
+                self._exe = lower(res.plan, res.program, params=self.params)
+                self._packed = self._exe.pack(self.weights)
+            except LoweringError:
+                # flow has no bit-exact fast lowering: serve op by op
+                self.use_executor = use_executor = False
+        if not use_executor:
+            from ..cimsim.functional import FunctionalSimulator
+            res = compiler.compile_graph(graph, arch, level=level,
+                                         expand=True)
+            self._sim = FunctionalSimulator(res.plan, res.program,
+                                            self.weights, self.shifts,
+                                            params=self.params)
+
+    def serve(self, requests: List[CimRequest]) -> List[CimRequest]:
+        """Serve ``requests`` in arrival order, ``max_batch`` at a time.
+
+        Each batch is one executor dispatch (ragged final batches just
+        trace a second batch shape, cached thereafter).  The first
+        dispatch of a new batch shape runs once untimed to warm the jit
+        cache, so ``latency_s`` / ``ServiceStats`` report steady-state
+        serving cost rather than trace time.
+        """
+        done: List[CimRequest] = []
+        for i in range(0, len(requests), self.max_batch):
+            batch = requests[i:i + self.max_batch]
+            if self.use_executor and len(batch) not in self._warmed:
+                self._serve_batch(batch)
+                self._warmed.add(len(batch))
+            t0 = time.time()
+            self._serve_batch(batch)
+            dt = time.time() - t0
+            for r in batch:
+                r.latency_s = dt
+            self.stats.batches += 1
+            self.stats.requests += len(batch)
+            self.stats.serve_s += dt
+            done.extend(batch)
+        return done
+
+    def _serve_batch(self, batch: List[CimRequest]) -> None:
+        if not self.use_executor:
+            for r in batch:
+                out = self._sim.run({k: np.asarray(v)
+                                     for k, v in r.inputs.items()})
+                r.outputs = {t: np.asarray(out[t]) for t in self.graph.outputs}
+            return
+        stacked = {name: np.stack([np.asarray(r.inputs[name])
+                                   for r in batch])
+                   for name in self.graph.inputs}
+        outs = self._exe.run_batch(stacked, packed=self._packed,
+                                   shifts=self.shifts)
+        for i, r in enumerate(batch):
+            r.outputs = {t: outs[t][i] for t in self.graph.outputs}

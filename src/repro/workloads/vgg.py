@@ -41,7 +41,6 @@ def _vgg(name: str, cfg, in_hw: int, fcs, n_classes: int) -> Graph:
             cin = entry
     nodes.append(Node("flatten", "Flatten", [t], ["flat.out"]))
     t = "flat.out"
-    prev = None
     for i, width in enumerate(fcs + [n_classes]):
         fc = f"fc{i}"
         # Flatten output dimension is inferred at shape-inference time;
@@ -54,7 +53,6 @@ def _vgg(name: str, cfg, in_hw: int, fcs, n_classes: int) -> Graph:
             t = f"fcrelu{i}.out"
         else:
             t = f"{fc}.out"
-        prev = width
 
     g = _finalize(name, nodes, (3, in_hw, in_hw), t)
     return g

@@ -139,7 +139,7 @@ def test_trainer_end_to_end_and_resume(tmp_path):
 
 def test_trainer_loss_decreases(tmp_path):
     trainer, _ = _tiny_trainer(tmp_path, steps=30, save_every=100)
-    res = trainer.train()
+    trainer.train()
     lines = [json.loads(l) for l in
              (Path(tmp_path) / "metrics.jsonl").read_text().splitlines()
              if "loss" in json.loads(l)]
