@@ -7,18 +7,130 @@ Reports, for a compact cross-tier space on the Table-3 baseline:
   * cold vs warm (disk-cache) sweep wall time and the speedup;
   * exhaustive enumeration vs multi-fidelity successive halving — the
     full-compile reduction and whether both return the same best point;
-  * a multi-workload campaign pass through the shared job queue.
+  * a multi-workload campaign pass through the shared job queue;
+  * batched proxy rung throughput: the scalar per-point analytic loop
+    vs one ``dse.proxy_vec`` structure-of-arrays pass over a large
+    cross-tier space, asserted bit-equal point by point.
+
+The proxy section emits ``BENCH_dse.json`` next to this script
+(override the path with ``REPRO_BENCH_DSE_JSON``; under
+``REPRO_BENCH_SMOKE=1`` nothing is written unless the override is set)
+so future PRs can regress-check the rung's perf trajectory: the batched
+pass must stay >= 50x faster than the scalar loop on a >= 1000-point
+ResNet-18 space while ranking points identically.
 """
 from __future__ import annotations
 
+import json
+import os
 import tempfile
 import time
+from pathlib import Path
 
 from cim_common import SMOKE, get_arch, get_workload
-from repro.dse import (CompileCache, DesignSpace, pareto_frontier,
-                       run_campaign, successive_halving, sweep)
+from repro.core import compiler
+from repro.dse import (CompileCache, DesignSpace, NodeTensor,
+                       pareto_frontier, proxy_metrics_batch, run_campaign,
+                       successive_halving, sweep)
 
 SMOKE_NET = "tiny_cnn"
+
+
+def proxy_rows():
+    """Batched vs scalar proxy rung on a large cross-tier space."""
+    if SMOKE:
+        graph, arch = get_workload(SMOKE_NET), get_arch("toy")
+        space = DesignSpace(arch, arch_axes={
+            "xb.xb_size": [(32, 128), (64, 128)],
+            "xb.cell_precision": [1, 2]})
+    else:
+        graph = get_workload("resnet18", in_hw=32)
+        arch = get_arch("isaac-baseline")
+        space = DesignSpace(arch, arch_axes={
+            "xb.xb_size": [(64, 64), (96, 96), (128, 128), (192, 192),
+                           (256, 256), (512, 512)],
+            "xb.cell_precision": [1, 2, 4],
+            "xb.dac_bits": [1, 2, 4],
+            "core.xb_number": [(2, 2), (2, 4), (4, 4)],
+            "chip.core_number": [(8, 8), (16, 16), (32, 32)]})
+    points = space.points()
+
+    # Measure the scalar rung (the per-job loop the pre-batching runner
+    # executed) and the batched rung in *interleaved* rounds: both sides
+    # are single-threaded CPU work, so background machine load slows
+    # them proportionally and the per-round ratio stays stable where
+    # back-to-back measurement would drift.  One warm-up batched pass
+    # (first-touch numpy dispatch), then median per side and median of
+    # the per-round speedups.
+    nt = NodeTensor.from_graph(graph)
+    proxy_metrics_batch(graph, points, arch, node_tensor=nt)
+    rounds = 1 if SMOKE else 3
+    scalar_runs, batch_runs, ratios = [], [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        scalar = []
+        for pt in points:
+            try:
+                scalar.append((compiler.proxy_metrics(
+                    graph, pt.arch_for(arch), **pt.compile_kwargs()), None))
+            except Exception as e:
+                scalar.append((None, f"{type(e).__name__}: {e}"))
+        scalar_runs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        batch = proxy_metrics_batch(graph, points, arch, node_tensor=nt)
+        batch_runs.append(time.perf_counter() - t0)
+        ratios.append(scalar_runs[-1] / batch_runs[-1])
+    scalar_s = sorted(scalar_runs)[len(scalar_runs) // 2]
+    batch_s = sorted(batch_runs)[len(batch_runs) // 2]
+    speedup = sorted(ratios)[len(ratios) // 2]
+
+    mismatches = sum(
+        1 for i, (m, err) in enumerate(scalar)
+        if batch.metrics(i) != m or (err or None) != batch.errors[i])
+    assert mismatches == 0, \
+        f"batched proxy diverged from scalar on {mismatches} points"
+
+    def best(metrics_of):
+        feas = [(metrics_of(i)["latency_cycles"], i)
+                for i in range(len(points)) if metrics_of(i) is not None]
+        return min(feas)[1] if feas else None
+
+    same_best = best(lambda i: scalar[i][0]) == best(batch.metrics)
+    assert same_best, "batched rung would promote a different best point"
+
+    payload = {
+        "schema": 1,
+        "smoke": SMOKE,
+        "workload": graph.name,
+        "arch": arch.name,
+        "points": len(points),
+        "feasible": int(batch.feasible.sum()),
+        "scalar_s": round(scalar_s, 4),
+        "batched_s": round(batch_s, 4),
+        "speedup": round(speedup, 1),
+        "points_per_sec": round(len(points) / batch_s, 0),
+        "bit_exact": mismatches == 0,
+        "best_matches_scalar": bool(same_best),
+    }
+    path = os.environ.get("REPRO_BENCH_DSE_JSON")
+    if path or not SMOKE:
+        path = Path(path) if path else \
+            Path(__file__).resolve().parent / "BENCH_dse.json"
+        path.write_text(json.dumps(payload, indent=2) + "\n",
+                        encoding="utf-8")
+
+    return [
+        ("dse_proxy_points", float(len(points)),
+         f"{payload['feasible']} feasible"),
+        ("dse_proxy_scalar_s", scalar_s, "per-point python loop"),
+        ("dse_proxy_batched_s", batch_s, "one structure-of-arrays pass"),
+        ("dse_proxy_speedup_x", speedup,
+         "acceptance: >= 50x non-smoke (median of interleaved rounds)"),
+        ("dse_proxy_points_per_s", len(points) / max(batch_s, 1e-9), ""),
+        ("dse_proxy_bit_exact", 1.0, "asserted point by point"),
+        ("dse_proxy_best_matches_scalar", float(same_best),
+         "same promotion decision as the scalar rung"),
+    ]
 
 
 def rows():
@@ -95,6 +207,7 @@ def rows():
     out.append(("dse_campaign_full_evals", float(camp.full_evals),
                 f"exhaustive would pay {camp.exhaustive_evals}"))
     out.append(("dse_campaign_s", camp_s, "single shared job queue"))
+    out.extend(proxy_rows())
     return out
 
 

@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Tuple
 from .abstraction import CIMArch, ComputingMode
 from .graph import Graph, Node, n_mvm, out_elems, weight_matrix_shape
 from .mapping import (BitBinding, VXBMapping, bind, cores_per_copy,
-                      logical_cols_per_xb)
+                      logical_cols_per_xb, vxb_span_error)
 
 
 # ---------------------------------------------------------------------------
@@ -146,10 +146,8 @@ class CostModel:
         if not math.isfinite(alu):
             return 0.0
         cyc = 0.0
-        for succ in graph.successors(node):
-            if not succ.is_cim and succ.op_type not in ("Flatten", "Reshape",
-                                                        "Identity"):
-                cyc += out_elems(succ, graph.shapes) / alu
+        for elems in fused_epilogue_elems(node, graph):
+            cyc += elems / alu
         return cyc / max(windows, 1)
 
     def alu_cycles(self, node: Node, graph: Graph) -> float:
@@ -162,6 +160,21 @@ class CostModel:
 
     def weight_xbs(self, node: Node) -> int:
         return bind(node, self.arch, self.binding).n_xbs
+
+
+def fused_epilogue_elems(node: Node, graph: Graph) -> List[int]:
+    """Output element counts of the DCOM successors fused into ``node``'s
+    CIM stage, in graph order.
+
+    This is the single source of the §3.3.2 fusion rule (which successor
+    ops ride the producing stage's ALU budget): ``CostModel._epilogue``
+    sums ``elems / alu`` over it, and the batched proxy (dse.proxy_vec)
+    bakes the same ordered counts into its per-graph node tensor so the
+    two paths can never disagree on what is fused.
+    """
+    return [out_elems(succ, graph.shapes) for succ in graph.successors(node)
+            if not succ.is_cim and succ.op_type not in ("Flatten", "Reshape",
+                                                        "Identity")]
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +302,283 @@ def estimate_segment_cycles(placements: List[OpPlacement],
 
 
 # ---------------------------------------------------------------------------
+# Array-shaped twins of the duplication searches.
+#
+# The batched proxy cost model (dse.proxy_vec) evaluates the analytic
+# rung for a whole array of design points at once: every search below
+# operates on (n_points, n_nodes) tensors and is bit-exact against its
+# scalar namesake above — same bisection trajectory, same heap pop order
+# (ties resolve to the lowest node index, exactly like heapq on a
+# ``(-key, index)`` tuple), same floating-point operation order.  The
+# scalar implementations stay the oracle; tests/test_proxy_vec.py anchors
+# the equivalence point by point.
+# ---------------------------------------------------------------------------
+
+def seq_sum(a):
+    """Left-to-right float sum along the node axis — the same operation
+    order as Python's ``sum()`` over a placement list, so pipelined fill
+    and stage totals match the scalar estimate bit for bit."""
+    import numpy as np
+    out = np.zeros(a.shape[0], dtype=np.float64)
+    for j in range(a.shape[1]):
+        out = out + a[:, j]
+    return out
+
+
+def _unique_search_rows(arrays):
+    """(unique_index, inverse) over the rows of the stacked ``arrays``.
+
+    The duplication searches are pure functions of their per-point rows,
+    and large cross-product spaces repeat rows heavily (e.g. XBM and WLM
+    points of one arch variant pose the *same* search problem), so each
+    distinct row is searched once and the result broadcast back.
+    Bitwise row identity (a void view over the packed bytes) is used, so
+    merged rows are exactly-equal inputs — a pure deduplication, never
+    an approximation."""
+    import numpy as np
+    key = np.ascontiguousarray(np.concatenate(
+        [np.asarray(a, dtype=np.float64).reshape(a.shape[0], -1)
+         for a in arrays], axis=1))
+    view = key.view([("", np.void, key.shape[1] * 8)]).ravel()
+    _, first, inverse = np.unique(view, return_index=True,
+                                  return_inverse=True)
+    return first, inverse
+
+
+def _spend_leftover_arr(dup, n_mvm, t_window, cost, budget):
+    """Vectorized ``_spend_leftover``: per point, repeatedly give one more
+    copy to the placement with the largest current ``stage_cycles``.
+    Dense form — every row of the ``(rows, nodes)`` arrays is active.
+
+    Mirrors the heap semantics exactly: a popped placement that cannot
+    take another copy is discarded for good (both ineligibility
+    conditions are monotone — ``used`` never decreases, ``dup`` never
+    decreases — so the discard loses nothing), and ties select the
+    lowest node index.  Two pure-performance accelerations keep the
+    sequential character out of the hot path without changing a single
+    pop outcome:
+
+      * **run-length batching** — while the selected placement's heap
+        key ``(-stage, index)`` stays the smallest, the scalar heap
+        would keep popping it; the whole run is applied in one step.
+        Against the runner-up key ``(-s2, j2)`` that means popping while
+        ``stage > s2``, or while ``stage >= s2`` when ``index < j2``
+        (ties go to the lower index).  The run length comes from
+        inverting the stage step function and is then *verified* against
+        the exact float comparison the scalar code performs
+        (monotonicity of ``ceil(n/d) * t`` in ``d`` makes one check at
+        the run's last step sufficient); on any doubt the run degrades
+        to a single pop, which is always exact.
+      * **row compaction** — points whose heap has drained are dropped
+        from the working set, so late iterations only touch the few
+        long-running points.
+
+    Mutates and returns ``dup``.
+    """
+    import numpy as np
+    n_points, n_nodes = dup.shape
+    if n_nodes == 0 or n_points == 0:
+        return dup
+    out = dup
+    sub = np.arange(n_points)
+    d = out
+    nm, tw, cs, bud = n_mvm, t_window, cost, budget
+    used = (d * cs).sum(axis=1)
+    # masked stage: -inf marks discarded placements (popped ineligible)
+    ms = np.ceil(nm / d) * tw
+    neg_inf = np.full(sub.size, -np.inf)
+    pt = np.arange(sub.size)
+    # per-point pop budget: the scalar guard truncates after 100000 heap
+    # pops, and a batched run of m increments is m pops — count them the
+    # same way so even guard-truncated spends stay bit-exact
+    pops = np.zeros(sub.size, dtype=np.int64)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        while sub.size:
+            sel = ms.argmax(axis=1)             # ties: lowest index, like
+            flat = pt * n_nodes + sel           # heapq on (-stage, i)
+            msel = ms.ravel()[flat]             # == per-row max
+            live = (msel > -np.inf) & (pops < 100000)
+            if not live.all():
+                keep = np.flatnonzero(live)
+                out[sub] = d                    # write back finished rows
+                sub, d, nm, tw, cs, bud, used, ms, pops = (
+                    sub[keep], d[keep], nm[keep], tw[keep], cs[keep],
+                    bud[keep], used[keep], ms[keep], pops[keep])
+                neg_inf = neg_inf[:sub.size]
+                pt = pt[:sub.size]
+                continue
+            d_s = d.ravel()[flat]
+            nm_s = nm.ravel()[flat]
+            tw_s = tw.ravel()[flat]
+            cs_s = cs.ravel()[flat]
+            # runner-up heap key (-s2, j2) among the other live placements
+            if n_nodes > 1:
+                ms.ravel()[flat] = -np.inf
+                j2 = ms.argmax(axis=1)
+                s2 = ms.ravel()[pt * n_nodes + j2]
+                ms.ravel()[flat] = msel
+            else:
+                j2, s2 = sel, neg_inf
+            m_cap = np.minimum(nm_s - d_s, (bud - used) // cs_s)
+            m_cap = np.minimum(m_cap, 100000 - pops)
+            # run length: sel keeps popping while stage > s2 — or while
+            # stage >= s2 when it wins ties (sel < j2).  Invert the stage
+            # step function:
+            # stage(d') > s2  <=> ceil(nm/d') > floor(s2/t) = q
+            #                 <=> d' <= ceil(nm/q) - 1        (q >= 1)
+            # stage(d') >= s2 <=> ceil(nm/d') >= ceil(s2/t) = q2
+            #                 <=> d' <= ceil(nm/(q2 - 1)) - 1 (q2 >= 2)
+            # then verify the last step with the exact float comparison
+            # the scalar code performs (stage is non-increasing in d, so
+            # one check suffices); degrade to a single pop on any doubt.
+            wins_tie = sel < j2
+            qq = np.where(wins_tie, np.ceil(s2 / tw_s) - 1.0,
+                          np.floor(s2 / tw_s))
+            tgt = np.ceil(nm_s / np.maximum(qq, 1.0)) - d_s
+            m = np.where(qq >= 1, np.clip(tgt, 1, m_cap), m_cap)
+            m = np.where(m_cap >= 1, m, 0).astype(np.int64)
+            last_stage = np.ceil(nm_s / np.maximum(d_s + m - 1, 1)) * tw_s
+            exact = (m <= 1) | (last_stage > s2) | \
+                (wins_tie & (last_stage == s2))
+            m = np.where(exact, m, np.minimum(m, 1))
+            d.ravel()[flat] = d_s + m
+            used += m * cs_s
+            pops += np.maximum(m, 1)            # a failed pop still counts
+            new_stage = np.ceil(nm_s / np.maximum(d_s + m, 1)) * tw_s
+            ms.ravel()[flat] = np.where(m_cap >= 1, new_stage, -np.inf)
+    if sub.size:
+        out[sub] = d
+    return out
+
+
+def balance_duplication_arr(n_mvm, t_window, cost, budget, active=None):
+    """(points x nodes) twin of ``balance_duplication``.
+
+    ``n_mvm``/``t_window``/``cost`` are ``(P, N)`` arrays (``cost`` is the
+    per-copy resource cost in the caller's unit), ``budget`` is ``(P,)``;
+    ``active`` masks the points to search (inactive points keep dup=1).
+    Returns the ``(P, N)`` int64 duplication array: 60-step bisection over
+    the bottleneck target, then the leftover-spending greedy — both run
+    once per *distinct* search row (``_unique_search_rows``) and the
+    results broadcast back.
+    """
+    import numpy as np
+    n_points, n_nodes = t_window.shape
+    dup = np.ones((n_points, n_nodes), dtype=np.int64)
+    if n_nodes == 0 or n_points == 0:
+        return dup
+    if active is None:
+        active = np.ones(n_points, dtype=bool)
+    nm_full = np.broadcast_to(n_mvm, t_window.shape)
+    rows = active & (cost.sum(axis=1) <= budget)   # over budget: dup = 1
+    if not rows.any():
+        return dup
+    sub = np.flatnonzero(rows)               # bisect the active subset only
+    uniq, inv = _unique_search_rows([nm_full[sub], t_window[sub],
+                                     cost[sub], budget[sub]])
+    ui = sub[uniq]
+    nm = np.ascontiguousarray(nm_full[ui])
+    tw = np.ascontiguousarray(t_window[ui])
+    cs = np.ascontiguousarray(cost[ui])
+    bud = budget[ui]
+    work = nm * tw
+    lo = np.zeros(ui.size)
+    hi = work.max(axis=1)
+    best = np.ones((ui.size, n_nodes), dtype=np.int64)
+    for _ in range(60):
+        mid = (lo + hi) / 2
+        tgt = np.maximum(mid, 1e-9)[:, None]
+        d = np.minimum(np.maximum(1.0, np.ceil(work / tgt)), nm)
+        ok = (np.ceil(nm / d) * tw <= mid[:, None]).all(axis=1)
+        d = d.astype(np.int64)
+        feas = ok & ((d * cs).sum(axis=1) <= bud)
+        best = np.where(feas[:, None], d, best)
+        hi = np.where(feas, mid, hi)
+        lo = np.where(feas, lo, mid)
+    best = _spend_leftover_arr(best, nm, tw, cs, bud)
+    dup[sub] = best[inv]
+    return dup
+
+
+def greedy_duplication_arr(n_mvm, t_window, cost, budget, active=None):
+    """(points x nodes) twin of ``greedy_duplication`` (min-sum objective,
+    marginal-gain heap).  Same shapes/semantics as the balanced twin;
+    replays the exact pop sequence, including the scalar quirk that a
+    zero-gain pop discards the placement even if a later increment would
+    have turned its gain positive again (ceil steps are not convex).
+    Like the balanced twin, each distinct search row is solved once."""
+    import numpy as np
+    n_points, n_nodes = t_window.shape
+    dup = np.ones((n_points, n_nodes), dtype=np.int64)
+    if n_nodes == 0 or n_points == 0:
+        return dup
+    if active is None:
+        active = np.ones(n_points, dtype=bool)
+    nm_full = np.broadcast_to(n_mvm, t_window.shape)
+    rows = active & (cost.sum(axis=1) <= budget)   # over budget: dup = 1
+    if not rows.any():
+        return dup
+
+    def _gain_at(d, nm, tw, cs):
+        cur = np.ceil(nm / d) * tw
+        nxt = np.ceil(nm / (d + 1)) * tw
+        return (cur - nxt) / cs
+
+    osub = np.flatnonzero(rows)
+    uniq, inv = _unique_search_rows([nm_full[osub], t_window[osub],
+                                     cost[osub], budget[osub]])
+    ui = osub[uniq]
+    nm = np.ascontiguousarray(nm_full[ui])
+    tw = np.ascontiguousarray(t_window[ui])
+    cs = np.ascontiguousarray(cost[ui])
+    bud = budget[ui]
+    out = np.ones((ui.size, n_nodes), dtype=np.int64)
+    sub = np.arange(ui.size)
+    d = out
+    used = cs.sum(axis=1)
+    # masked gain: -inf marks discarded placements (popped with gain <= 0
+    # or over budget — discarded for good, like the scalar heap)
+    mg = _gain_at(d, nm, tw, cs)
+    while sub.size:
+        live = mg.max(axis=1) > -np.inf
+        if not live.all():
+            keep = np.flatnonzero(live)
+            out[sub] = d                   # write back finished rows
+            sub, d, nm, tw, cs, bud, used, mg = (
+                sub[keep], d[keep], nm[keep], tw[keep], cs[keep],
+                bud[keep], used[keep], mg[keep])
+            if not sub.size:
+                break
+        pt = np.arange(sub.size)
+        sel = mg.argmax(axis=1)
+        flat = pt * n_nodes + sel
+        g_s = mg.ravel()[flat]
+        cs_s = cs.ravel()[flat]
+        d_s = d.ravel()[flat]
+        nm_s = nm.ravel()[flat]
+        elig = (g_s > 0) & (used + cs_s <= bud) & (d_s < nm_s)
+        d.ravel()[flat] = d_s + elig
+        used += np.where(elig, cs_s, 0)
+        new_gain = _gain_at(d_s + 1, nm_s, tw.ravel()[flat], cs_s)
+        mg.ravel()[flat] = np.where(elig, new_gain, -np.inf)
+    if sub.size:
+        out[sub] = d
+    dup[osub] = out[inv]
+    return dup
+
+
+def estimate_segment_cycles_arr(n_mvm, dup, t_window, use_pipeline):
+    """(points,) twin of ``estimate_segment_cycles`` over (P, N) arrays;
+    ``use_pipeline`` is a per-point boolean column."""
+    import numpy as np
+    if t_window.shape[1] == 0:
+        return np.zeros(t_window.shape[0])
+    stage = np.ceil(n_mvm / dup) * t_window
+    pipelined = seq_sum(t_window) + stage.max(axis=1)
+    return np.where(use_pipeline, pipelined, seq_sum(stage))
+
+
+# ---------------------------------------------------------------------------
 # The CG pass
 # ---------------------------------------------------------------------------
 
@@ -334,9 +624,8 @@ def run(graph: Graph, arch: CIMArch, *, use_pipeline: bool = True,
         cols_per_unit = logical_cols_per_xb(full, arch)
         units_c_full = math.ceil(c / cols_per_unit)
         if slot_cap < xbs_per_unit:
-            raise ValueError(
-                f"{node.name}: one VXB column unit spans {xbs_per_unit} "
-                f"crossbars but the chip offers only {slot_cap}")
+            raise ValueError(vxb_span_error(node.name, xbs_per_unit,
+                                            slot_cap))
         # search the (row-chunks x col-chunks) grid minimizing the total
         # chunk count (serial reload generations), subject to one chunk
         # fitting the chip; ties prefer bigger chunks (better packing)

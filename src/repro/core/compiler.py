@@ -132,6 +132,14 @@ def compile_key_for_plan(plan: SchedulePlan) -> str:
     return f"{key}:{policy}" if policy else key
 
 
+def mode_error(arch: CIMArch, level: ComputingMode) -> str:
+    """Message for a scheduling level the chip's computing mode does not
+    expose.  Single-sourced so the batched proxy's masked-infeasibility
+    reasons (dse.proxy_vec) match the scalar raises verbatim."""
+    return (f"chip {arch.name} (mode {arch.mode.value}) does not expose "
+            f"the {level.value} interface")
+
+
 def proxy_metrics(
     graph: Graph,
     arch: CIMArch,
@@ -151,22 +159,26 @@ def proxy_metrics(
     carries the sweep objective keys (``latency_cycles``, ``peak_power``,
     ``crossbars_used``) so a proxy score ranks points the same way a full
     compile would be ranked — absolute values are *not* comparable across
-    fidelities, and proxies are never cached.
+    fidelities, and proxies are never cached on disk.
 
     Raises like ``compile_graph`` for configurations no compile could
     serve (level above the chip's mode, bit slices that fit no crossbar).
+
+    This scalar path is the *oracle*: ``dse.proxy_vec.proxy_metrics_batch``
+    evaluates the same model for an entire array of design points in one
+    vectorized pass, bit-exact against this function (infeasible points
+    come back masked instead of raising).
     """
     from .cg_opt import (CostModel, balance_duplication,
                          estimate_segment_cycles, greedy_duplication)
+    from .mapping import vxb_span_error
     from .mvm_opt import peak_active_xbs
 
     if isinstance(level, str):
         level = ComputingMode(level)
     level = level or arch.mode
     if not arch.mode.allows(level):
-        raise ValueError(
-            f"chip {arch.name} (mode {arch.mode.value}) does not expose the "
-            f"{level.value} interface")
+        raise ValueError(mode_error(arch, level))
 
     cm = CostModel(arch, binding)
     cap_xbs = arch.chip.n_cores * arch.core.n_xbs
@@ -174,10 +186,8 @@ def proxy_metrics(
     for node in graph.cim_nodes:
         p = cm.placement(node, graph)
         if p.mapping.xbs_per_vxb > cap_xbs:
-            raise ValueError(
-                f"{node.name}: one VXB column unit spans "
-                f"{p.mapping.xbs_per_vxb} crossbars but the chip offers "
-                f"only {cap_xbs}")
+            raise ValueError(vxb_span_error(node.name, p.mapping.xbs_per_vxb,
+                                            cap_xbs))
         pls.append(p)
 
     budget = arch.chip.n_cores
@@ -248,9 +258,7 @@ def compile_graph(
         level = ComputingMode(level)
     level = level or arch.mode
     if not arch.mode.allows(level):
-        raise ValueError(
-            f"chip {arch.name} (mode {arch.mode.value}) does not expose the "
-            f"{level.value} interface")
+        raise ValueError(mode_error(arch, level))
 
     cache = cache if cache is not None else _COMPILE_CACHE
     key = compile_key(graph, arch, level=level, use_pipeline=use_pipeline,

@@ -29,6 +29,22 @@ class BitBinding(enum.Enum):
     B_TO_XB = "B->XB"       # bits to separate crossbars
 
 
+def bind_error_msg(cols: int, slices: int) -> str:
+    """The ``bind`` infeasibility message for B->XBC with too few columns.
+
+    Single-sourced so the batched proxy's masked-infeasibility reasons
+    (dse.proxy_vec) can never drift from the scalar raise."""
+    return (f"crossbar has {cols} columns < {slices} bit slices; "
+            "use BitBinding.B_TO_XB for this cell precision")
+
+
+def vxb_span_error(name: str, span: int, cap: int) -> str:
+    """The over-capacity message for a VXB column unit spanning more
+    crossbars than the chip offers (cg_opt chunking, proxy screening)."""
+    return (f"{name}: one VXB column unit spans {span} crossbars but the "
+            f"chip offers only {cap}")
+
+
 @dataclasses.dataclass(frozen=True)
 class VXBMapping:
     """How one operator copy's weight matrix occupies physical crossbars."""
@@ -78,9 +94,7 @@ def bind(node_or_rc, arch: CIMArch,
         # of the same crossbar (never straddling two crossbars), so each
         # crossbar holds floor(cols / slices) logical columns
         if xc < slices:
-            raise ValueError(
-                f"crossbar has {xc} columns < {slices} bit slices; "
-                "use BitBinding.B_TO_XB for this cell precision")
+            raise ValueError(bind_error_msg(xc, slices))
         cols_per_xb = xc // slices
         grid_c = math.ceil(c / cols_per_xb)
         cols_last = (c - (grid_c - 1) * cols_per_xb) * slices
@@ -93,6 +107,47 @@ def bind(node_or_rc, arch: CIMArch,
     return VXBMapping(r=r, c=c, binding=binding, col_slices=slices,
                       grid_r=grid_r, grid_c=grid_c,
                       rows_used_last=rows_last, cols_used_last=cols_last)
+
+
+def bind_arrays(r, c, *, rows, cols, slices, b_to_xb):
+    """Array-shaped twin of ``bind`` over a (points x nodes) broadcast.
+
+    ``r``/``c`` are per-node integer arrays (shape ``(N,)`` or ``(P, N)``)
+    and ``rows``/``cols``/``slices``/``b_to_xb`` per-point columns (shape
+    ``(P, 1)``); everything broadcasts to ``(P, N)``.  Returns a dict of
+    int64 arrays ``grid_r``/``grid_c``/``n_xbs``/``xbs_per_vxb`` plus the
+    boolean ``feasible`` mask (False exactly where scalar ``bind`` raises:
+    B->XBC with fewer physical columns than bit slices).  Entries of
+    infeasible points are computed with guarded denominators and carry no
+    meaning — mask before use.
+
+    Bit-exact against ``bind``: every quantity is the same integer
+    ceiling/floor arithmetic, just broadcast.  The scalar path stays the
+    oracle (tests/test_proxy_vec.py anchors the equivalence).
+    """
+    import numpy as np
+
+    r = np.asarray(r, dtype=np.int64)
+    c = np.asarray(c, dtype=np.int64)
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    slices = np.asarray(slices, dtype=np.int64)
+    b_to_xb = np.asarray(b_to_xb, dtype=bool)
+
+    feasible = b_to_xb | (cols >= slices)
+    grid_r = -(-r // np.maximum(rows, 1))
+    # B->XBC: bit slices share a crossbar -> floor(cols/slices) logical
+    # columns per crossbar; B->XB: one slice per crossbar, full columns
+    cols_per_xb = np.maximum(cols // np.maximum(slices, 1), 1)
+    grid_c_xbc = -(-c // cols_per_xb)
+    grid_c_xb = -(-c // np.maximum(cols, 1)) * slices
+    grid_c = np.where(b_to_xb, grid_c_xb, grid_c_xbc)
+    n_xbs = grid_r * grid_c
+    xbs_per_vxb = np.where(b_to_xb, slices, 1)
+    out = np.broadcast_arrays(grid_r, grid_c, n_xbs, xbs_per_vxb,
+                              feasible | np.zeros_like(grid_r, dtype=bool))
+    return {"grid_r": out[0], "grid_c": out[1], "n_xbs": out[2],
+            "xbs_per_vxb": out[3], "feasible": out[4]}
 
 
 def vxbs_per_core(arch: CIMArch, mapping: VXBMapping) -> int:

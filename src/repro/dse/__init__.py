@@ -12,8 +12,11 @@ turns the one-shot compiler into a search service:
   * ``runner``   — the shared job-queue evaluation primitive
                    (``EvalJob``/``run_jobs``) plus the exhaustive
                    ``sweep`` built on it;
-  * ``search``   — multi-fidelity successive halving (proxy metrics →
-                   graph-prefix compiles → full compiles);
+  * ``proxy_vec``— batched structure-of-arrays proxy cost model: the
+                   analytic rung for an entire array of design points in
+                   one vectorized pass, bit-exact vs the scalar oracle;
+  * ``search``   — multi-fidelity successive halving (batched proxy
+                   metrics → graph-prefix compiles → full compiles);
   * ``campaign`` — multi-workload campaigns over one queue + cache,
                    with per-workload frontiers and robust-point summary;
   * ``pareto``   — Pareto frontier over (latency, peak power, crossbars).
@@ -24,6 +27,8 @@ from .cache import CompileCache, default_cache_dir
 from .campaign import (CampaignResult, RobustPoint, WorkloadOutcome,
                        robust_points, run_campaign)
 from .pareto import DEFAULT_OBJECTIVES, dominates, pareto_frontier
+from .proxy_vec import (BatchedProxyMetrics, NodeTensor,
+                        proxy_metrics_batch)
 from .runner import (EvalJob, SweepResult, evaluate_point, run_jobs,
                      sweep)
 from .search import (DEFAULT_LADDER, HalvingSearch, Rung, RungLog,
@@ -35,6 +40,7 @@ __all__ = [
     "CampaignResult", "RobustPoint", "WorkloadOutcome",
     "robust_points", "run_campaign",
     "DEFAULT_OBJECTIVES", "dominates", "pareto_frontier",
+    "BatchedProxyMetrics", "NodeTensor", "proxy_metrics_batch",
     "EvalJob", "SweepResult", "evaluate_point", "run_jobs", "sweep",
     "DEFAULT_LADDER", "HalvingSearch", "Rung", "RungLog",
     "SearchResult", "successive_halving",

@@ -50,8 +50,9 @@ class CompileCache:
         self.root = Path(root) if root is not None else default_cache_dir()
         self._mem: Optional[Dict[str, CompileResult]] = {} if memory else None
         self._mem_metrics: Dict[str, Dict] = {}
-        self.hits = 0
-        self.misses = 0
+        self.hits = 0           # full CompileResult hits (get)
+        self.metrics_hits = 0   # metric-only hits (get_metrics, no unpickle)
+        self.misses = 0         # lookups of either kind that found nothing
 
     # -- paths ------------------------------------------------------------
     def _dir(self, key: str) -> Path:
@@ -87,7 +88,7 @@ class CompileCache:
     def get_metrics(self, key: str) -> Optional[Dict]:
         """Metric bundle only — the cheap warm-sweep path (no unpickling)."""
         if key in self._mem_metrics:
-            self.hits += 1
+            self.metrics_hits += 1
             return dict(self._mem_metrics[key])
         try:
             with open(self._json(key)) as f:
@@ -95,7 +96,7 @@ class CompileCache:
         except (OSError, json.JSONDecodeError):
             self.misses += 1
             return None
-        self.hits += 1
+        self.metrics_hits += 1
         self._mem_metrics[key] = metrics
         return dict(metrics)
 
@@ -133,11 +134,19 @@ class CompileCache:
                       ignore_errors=True)
 
     def stats(self) -> Dict[str, int]:
+        """Hit/miss counters for this handle plus the on-disk entry count.
+
+        ``hits`` are full ``CompileResult`` lookups served, and
+        ``metrics_hits`` the metric-only lookups that answered without
+        unpickling a plan (the warm-sweep fast path); ``misses`` counts
+        lookups of either kind that found nothing.  Campaign summaries
+        surface this bundle (``CampaignResult.cache_stats``)."""
         disk = 0
         base = self.root / f"v{COMPILE_KEY_SCHEMA}"
         if base.exists():
             disk = sum(1 for _ in base.glob("*/*.pkl"))
-        return {"hits": self.hits, "misses": self.misses, "disk_entries": disk}
+        return {"hits": self.hits, "metrics_hits": self.metrics_hits,
+                "misses": self.misses, "disk_entries": disk}
 
 
 def _atomic_write(path: Path, data: bytes) -> None:

@@ -12,8 +12,11 @@ Two modes:
 
   * ``"halving"`` (default) — one ``HalvingSearch`` per workload, driven
     in lockstep: each round gathers the current rung's jobs from every
-    unfinished search into one queue, then routes results back.  Full
-    compiles are paid only for each workload's survivor set.
+    unfinished search into one queue, then routes results back.  The
+    opening round screens the cross-product of all workloads x all
+    points through the batched proxy cost model (one vectorized
+    ``dse.proxy_vec`` pass per workload — see runner); full compiles are
+    paid only for each workload's survivor set.
   * ``"exhaustive"`` — every (workload, point) pair at full fidelity in
     one round-robin-interleaved queue; the reference baseline.
 
@@ -76,6 +79,9 @@ class CampaignResult:
     n_points: int
     mode: str
     robust_tol: float
+    #: ``CompileCache.stats()`` snapshot taken when the campaign finished
+    #: (None when the campaign ran uncached)
+    cache_stats: Optional[Dict[str, int]] = None
 
     @property
     def full_evals(self) -> int:
@@ -103,6 +109,12 @@ class CampaignResult:
         for rp in self.robust[:5]:
             lines.append(f"    {rp.point.label()}  "
                          f"(max regret {rp.max_regret:.1%})")
+        if self.cache_stats is not None:
+            s = self.cache_stats
+            lines.append(f"  compile cache: {s['hits']} hits, "
+                         f"{s['metrics_hits']} metric-only hits, "
+                         f"{s['misses']} misses "
+                         f"({s['disk_entries']} disk entries)")
         return "\n".join(lines)
 
 
@@ -210,6 +222,10 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
                                         ladder=ladder, objective=objective,
                                         min_keep=min_keep)
                     for name, g in wls}
+        # one memo for the whole campaign: identical proxy jobs recurring
+        # across rungs or rounds (multi-proxy ladders, repeated points)
+        # cost a dict lookup instead of a recompute
+        proxy_memo: Dict = {}
         while any(not s.done for s in searches.values()):
             jobs: List[EvalJob] = []
             slices: List[Tuple[str, int]] = []
@@ -220,7 +236,8 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
                 batch = s.jobs(index_base=len(jobs), tag=name)
                 jobs.extend(batch)
                 slices.append((name, len(batch)))
-            results = run_jobs(jobs, cache=cache, workers=workers)
+            results = run_jobs(jobs, cache=cache, workers=workers,
+                               proxy_memo=proxy_memo)
             off = 0
             for name, count in slices:
                 searches[name].observe(results[off:off + count])
@@ -255,4 +272,5 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
     return CampaignResult(
         workloads=outcomes,
         robust=robust_points(outcomes, robust_tol, objective),
-        n_points=len(points), mode=mode, robust_tol=robust_tol)
+        n_points=len(points), mode=mode, robust_tol=robust_tol,
+        cache_stats=cache.stats() if cache is not None else None)

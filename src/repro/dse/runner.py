@@ -1,23 +1,29 @@
 """Job-queue evaluation primitive shared by sweeps, searches, campaigns.
 
 An ``EvalJob`` is one (graph, design point) evaluation at some fidelity:
-a full compile + perf estimate by default, or an analytic proxy
-(``compiler.proxy_metrics``) when ``proxy=True``.  ``run_jobs`` executes
-any job list — one workload's exhaustive sweep, one rung of a
-successive-halving search, or a whole campaign round interleaving many
-workloads — through a single queue, so wall-clock scales with total work
-rather than with the number of callers.
+a full compile + perf estimate by default, or an analytic proxy when
+``proxy=True``.  ``run_jobs`` executes any job list — one workload's
+exhaustive sweep, one rung of a successive-halving search, or a whole
+campaign round interleaving many workloads — through a single queue, so
+wall-clock scales with total work rather than with the number of
+callers.
 
 Execution model:
 
-  * ``workers <= 1`` (or a single job) runs in-process, reusing the
-    caller's cache object so its memory layer stays live;
-  * ``workers > 1`` farms jobs to a process pool; each worker re-opens
-    the cache directory (``memory=False`` — workers must not grow
-    resident memory) and entries are written atomically.  If the host
-    cannot fork, the pool degrades to the same per-job code path
-    serially.  Either way the caller's cache memory layer is dropped
-    afterwards so freshly-written disk entries become visible to it.
+  * proxy jobs never reach the pool: they are grouped per (graph, base
+    arch) and evaluated through the **batched proxy cost model**
+    (``dse.proxy_vec.proxy_metrics_batch``) — one vectorized pass per
+    group, bit-exact against per-job scalar ``compiler.proxy_metrics``
+    (infeasible points come back as ``error`` results carrying the
+    scalar raise's message);
+  * compile jobs with ``workers <= 1`` (or a single job) run in-process,
+    reusing the caller's cache object so its memory layer stays live;
+  * compile jobs with ``workers > 1`` are farmed to a process pool; each
+    worker re-opens the cache directory (``memory=False`` — workers must
+    not grow resident memory) and entries are written atomically.  If
+    the host cannot fork, the pool degrades to the same per-job code
+    path serially.  Either way the caller's cache memory layer is
+    dropped afterwards so freshly-written disk entries become visible.
 
 Results come back ordered by job index, so outcomes are bit-identical
 for any worker count.  A job whose compilation raises (e.g. an arch
@@ -31,7 +37,14 @@ Scoring a full-fidelity job:
   3. cold path — ``compile_graph`` (which itself consults the cache for
      the full result) then ``perf.estimate``; the entry is persisted.
 
-Proxy jobs are analytic and never touch the cache.
+Proxy jobs are analytic and never touch the disk cache, but they are
+memoized per ``(graph, base arch, point)`` within one ``run_jobs``
+invocation — and across invocations when the caller threads its own
+``proxy_memo`` dict through (``successive_halving`` keeps one per
+search, ``run_campaign`` one per campaign, so identical proxy jobs are
+never recomputed across rungs or rounds).  Memo keys use object
+identity of the graph/arch; the memo pins every pair it has keyed, so
+entries stay valid for as long as the dict itself lives.
 """
 from __future__ import annotations
 
@@ -113,29 +126,102 @@ def _eval_job_worker(args: Tuple[EvalJob, Optional[str]]) -> SweepResult:
     return _eval_job(job, cache)
 
 
+def _eval_proxy_jobs(jobs: Sequence[EvalJob],
+                     memo: Dict[Any, Tuple[Optional[Dict], Optional[str]]],
+                     ) -> List[SweepResult]:
+    """Evaluate proxy jobs through the batched proxy cost model.
+
+    Jobs are grouped per (graph, base arch); each group's unmemoized
+    points go through one ``proxy_metrics_batch`` pass.  ``memo`` maps
+    ``(id(graph), id(arch), point)`` to ``(metrics, error)`` — reused
+    duplicates (within a group, across groups, or across invocations
+    when the caller threads the dict through) cost a dict lookup.  The
+    memo also pins each (graph, arch) pair it has keyed, so the ids can
+    never be recycled onto different objects while the dict lives.  If
+    the batched path itself fails unexpectedly, the group's points fall
+    back to the scalar oracle one by one, so a proxy job can never be
+    *worse* off than before batching.
+    """
+    from .proxy_vec import NodeTensor, proxy_metrics_batch, _scalar_oracle
+
+    groups: Dict[Tuple[int, int], List[EvalJob]] = {}
+    for j in jobs:
+        groups.setdefault((id(j.graph), id(j.arch)), []).append(j)
+
+    results: List[SweepResult] = []
+    for gkey, grp in groups.items():
+        graph, arch = grp[0].graph, grp[0].arch
+        memo[("__pin__", *gkey)] = (graph, arch)
+        todo: List[DesignPoint] = []
+        keys: List[Tuple] = []
+        seen = set()
+        for j in grp:
+            key = (*gkey, j.point)
+            if key not in memo and key not in seen:
+                seen.add(key)
+                todo.append(j.point)
+                keys.append(key)
+        if todo:
+            try:
+                batch = proxy_metrics_batch(
+                    graph, todo, arch,
+                    node_tensor=NodeTensor.from_graph(graph))
+                for i, key in enumerate(keys):
+                    memo[key] = (batch.metrics(i), batch.errors[i])
+            except Exception:    # semantics net: replay through the oracle
+                for key, pt in zip(keys, todo):
+                    try:
+                        arch_pt = pt.arch_for(arch)
+                    except Exception as e:
+                        memo[key] = (None, f"{type(e).__name__}: {e}")
+                        continue
+                    memo[key] = _scalar_oracle(graph, arch_pt, pt)
+        for j in grp:
+            metrics, error = memo[(*gkey, j.point)]
+            results.append(SweepResult(
+                index=j.index, point=j.point,
+                metrics=dict(metrics) if metrics is not None else None,
+                error=error, tag=j.tag))
+    return results
+
+
 def run_jobs(jobs: Iterable[EvalJob],
              cache: Optional[CompileCache] = None,
-             workers: int = 1) -> List[SweepResult]:
-    """Evaluate ``jobs`` and return results sorted by job index."""
-    jobs = list(jobs)
-    if workers <= 1 or len(jobs) <= 1:
-        results = [_eval_job(j, cache) for j in jobs]
-        results.sort(key=lambda r: r.index)
-        return results
+             workers: int = 1,
+             proxy_memo: Optional[Dict] = None) -> List[SweepResult]:
+    """Evaluate ``jobs`` and return results sorted by job index.
 
-    cache_dir = str(cache.root) if cache is not None else None
-    args = [(j, cache_dir) for j in jobs]
-    try:
-        from concurrent.futures import ProcessPoolExecutor
-        with ProcessPoolExecutor(max_workers=workers) as pool:
-            results = list(pool.map(_eval_job_worker, args, chunksize=1))
-    except (OSError, ImportError):   # no process support: degrade serially
-        results = [_eval_job_worker(a) for a in args]
+    ``proxy_memo`` (optional) is a dict threaded through by callers that
+    issue proxy jobs repeatedly for the same (graph, arch, point)
+    triples; by default memoization is scoped to this invocation.
+    """
+    jobs = list(jobs)
+    proxy_jobs = [j for j in jobs if j.proxy]
+    compile_jobs = [j for j in jobs if not j.proxy]
+    results: List[SweepResult] = []
+    if proxy_jobs:
+        memo = proxy_memo if proxy_memo is not None else {}
+        results.extend(_eval_proxy_jobs(proxy_jobs, memo))
+
+    if compile_jobs:
+        if workers <= 1 or len(compile_jobs) <= 1:
+            results.extend(_eval_job(j, cache) for j in compile_jobs)
+        else:
+            cache_dir = str(cache.root) if cache is not None else None
+            args = [(j, cache_dir) for j in compile_jobs]
+            try:
+                from concurrent.futures import ProcessPoolExecutor
+                with ProcessPoolExecutor(max_workers=workers) as pool:
+                    results.extend(pool.map(_eval_job_worker, args,
+                                            chunksize=1))
+            except (OSError, ImportError):  # no processes: degrade serially
+                results.extend(_eval_job_worker(a) for a in args)
+            if cache is not None:
+                # the caller's memory layer predates the workers' writes
+                # (pool and fallback alike use private cache handles):
+                # resync it from disk
+                cache.drop_memory()
     results.sort(key=lambda r: r.index)
-    if cache is not None:
-        # the caller's memory layer predates the workers' writes (pool and
-        # fallback alike use private cache handles): resync it from disk
-        cache.drop_memory()
     return results
 
 

@@ -6,9 +6,14 @@ few values per axis — the cross product is multiplicative.  Successive
 halving evaluates *every* candidate only at the cheapest fidelity and
 spends full compiles on a geometrically-shrinking survivor set:
 
-  rung 0 (``proxy``)   — analytic ``compiler.proxy_metrics``: real cost
-                         model + duplication search, no codegen, no
-                         event-driven simulation; never cached;
+  rung 0 (``proxy``)   — the analytic proxy cost model: real cost model
+                         + duplication search, no codegen, no
+                         event-driven simulation.  Evaluated through the
+                         *batched* structure-of-arrays path
+                         (``dse.proxy_vec``): the whole rung is a few
+                         vectorized NumPy passes, bit-exact against
+                         per-point ``compiler.proxy_metrics``, so the
+                         cheap rung stays cheap at 10^5+ points;
   rung 1 (``prefix``)  — full compile of ``Graph.prefix(frac * n)``, a
                          truncated workload that costs a fraction of the
                          full model but ranks points like it;
@@ -224,6 +229,8 @@ def successive_halving(graph: Graph,
     """
     search = HalvingSearch(graph, space, base_arch, eta=eta, ladder=ladder,
                            objective=objective, min_keep=min_keep)
+    proxy_memo: dict = {}    # proxy results shared across this search's rungs
     while not search.done:
-        search.observe(run_jobs(search.jobs(), cache=cache, workers=workers))
+        search.observe(run_jobs(search.jobs(), cache=cache, workers=workers,
+                                proxy_memo=proxy_memo))
     return search.search_result()

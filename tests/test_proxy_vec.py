@@ -1,0 +1,320 @@
+"""Batched proxy cost model: bit-equivalence against the scalar oracle.
+
+The contract under test (dse/proxy_vec.py): for every design point the
+batched structure-of-arrays path returns *exactly* the dict scalar
+``compiler.proxy_metrics`` returns — same floats, bit for bit — and for
+every point the scalar path raises on, the batched path returns a masked
+entry whose error string equals the scalar raise.  The suite sweeps
+chips (CM/XBM/WLM), both bit bindings, both CG switches, multi-segment
+(over-capacity) workloads and degenerate arch parameters.
+"""
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, st
+
+from repro.core import compiler
+from repro.core.abstraction import get_arch
+from repro.dse import (CompileCache, DesignSpace, EvalJob, NodeTensor,
+                       proxy_metrics_batch, run_campaign, run_jobs)
+from repro.dse.runner import _eval_job
+from repro.dse.space import DesignPoint
+from repro.workloads import get_workload
+
+CHIPS = ("toy", "puma", "jia-issc21", "jain-jssc21")
+
+
+def scalar_outcome(graph, base_arch, point):
+    """(metrics, error) exactly as the pre-batching job runner saw it."""
+    try:
+        arch = point.arch_for(base_arch)
+        return compiler.proxy_metrics(graph, arch,
+                                      **point.compile_kwargs()), None
+    except Exception as e:
+        return None, f"{type(e).__name__}: {e}"
+
+
+def assert_batch_equals_scalar(graph, base_arch, points):
+    batch = proxy_metrics_batch(graph, points, base_arch)
+    assert len(batch) == len(points)
+    for i, pt in enumerate(points):
+        expected, error = scalar_outcome(graph, base_arch, pt)
+        if error is None:
+            assert bool(batch.feasible[i]), (pt.label(), batch.errors[i])
+            assert batch.metrics(i) == expected, pt.label()
+            assert batch.errors[i] is None
+        else:
+            assert not batch.feasible[i], pt.label()
+            assert batch.metrics(i) is None
+            assert batch.errors[i] == error, pt.label()
+    return batch
+
+
+# ------------------------------------------------------ cross-chip sweeps
+@pytest.mark.parametrize("chip", CHIPS)
+@pytest.mark.parametrize("workload", ["tiny_cnn", "tiny_mlp"])
+def test_batched_matches_scalar_bit_exact(workload, chip):
+    """Every (level x binding x pipeline x duplication x cell precision)
+    combination the space enumerates, on every published chip mode."""
+    graph = get_workload(workload)
+    arch = get_arch(chip)
+    space = DesignSpace(arch, arch_axes={"xb.cell_precision": [1, 2, 4]})
+    points = space.points()
+    assert points, "space collapsed"
+    assert_batch_equals_scalar(graph, arch, points)
+
+
+def test_batched_matches_scalar_multi_segment():
+    """An over-capacity workload (multi-segment schedule: nonzero rewrite
+    cycles, crossbars clamped to the pool) must agree too."""
+    graph = get_workload("tiny_cnn")
+    toy = get_arch("toy")
+    arch = toy.replace(chip=toy.chip.__class__(core_number=(1, 1)))
+    space = DesignSpace(arch)
+    points = space.points()
+    batch = assert_batch_equals_scalar(graph, arch, points)
+    rewrites = [batch.metrics(i)["rewrite_cycles"]
+                for i in range(len(points)) if batch.feasible[i]]
+    assert any(r > 0 for r in rewrites), \
+        "test intended to cover the multi-segment path"
+
+
+def test_batched_matches_scalar_resnet_arch_axes():
+    """A cross-tier arch sweep on a real workload (the benchmark shape):
+    xb geometry, cell precision, DAC width, core/chip counts."""
+    graph = get_workload("resnet18", in_hw=32)
+    arch = get_arch("isaac-baseline")
+    space = DesignSpace(
+        arch,
+        levels=("CM", "WLM"), pipeline=(True,),
+        arch_axes={"xb.xb_size": [(64, 64), (128, 128)],
+                   "xb.cell_precision": [2, 4],
+                   "chip.core_number": [(8, 8), (32, 32)]})
+    assert_batch_equals_scalar(graph, arch, space.points())
+
+
+# --------------------------------------------------- masked infeasibility
+def test_infeasible_points_masked_with_scalar_error_strings():
+    graph = get_workload("tiny_cnn")
+    arch = get_arch("puma")                # XBM chip
+    points = [
+        # level above the chip's computing mode
+        DesignPoint("WLM", "B->XBC", True, True),
+        # B->XBC with fewer physical columns than bit slices
+        DesignPoint("XBM", "B->XBC", True, True,
+                    (("xb.xb_size", (32, 2)),)),
+        # B->XB whose VXB column unit spans more crossbars than the chip
+        DesignPoint("XBM", "B->XB", True, True,
+                    (("chip.core_number", (1, 1)),
+                     ("core.xb_number", (1, 1)),
+                     ("xb.cell_precision", 1))),
+        # unknown override tier (arch_for raises KeyError)
+        DesignPoint("XBM", "B->XBC", True, True,
+                    (("bogus.tier", 1),)),
+        # a feasible point mixed in
+        DesignPoint("XBM", "B->XBC", True, True),
+    ]
+    batch = assert_batch_equals_scalar(graph, arch, points)
+    assert list(batch.feasible) == [False, False, False, False, True]
+    assert batch.errors[0].startswith("ValueError: chip puma")
+    assert "bit slices" in batch.errors[1]
+    assert "VXB column unit" in batch.errors[2]
+    assert batch.errors[3].startswith("KeyError")
+
+
+def test_enum_valued_and_invalid_point_fields_match_scalar():
+    """DesignPoint declares string level/binding, but the scalar paths
+    normalize via ComputingMode(...)/BitBinding(...) and so accept enum
+    values (and raise on invalid ones, level before binding before the
+    mode-allows check).  The batched path must agree on all of it."""
+    from repro.core.abstraction import ComputingMode
+    from repro.core.mapping import BitBinding
+    graph = get_workload("tiny_cnn")
+    arch = get_arch("puma")
+    points = [
+        DesignPoint("XBM", BitBinding.B_TO_XB, True, True),
+        DesignPoint(ComputingMode.XBM, "B->XBC", True, True),
+        DesignPoint(ComputingMode.WLM, BitBinding.B_TO_XB, True, True),
+        DesignPoint("bogus", "B->XBC", True, True),
+        DesignPoint("XBM", "sideways", True, True),
+        DesignPoint("bogus", "sideways", True, True),   # level error wins
+        DesignPoint("WLM", "sideways", True, True),     # binding error wins
+    ]
+    jobs = [EvalJob(index=i, graph=graph, point=p, arch=arch, proxy=True)
+            for i, p in enumerate(points)]
+    got = run_jobs(jobs)
+    ref = [_eval_job(j, None) for j in jobs]
+    assert [(r.metrics, r.error) for r in got] == \
+        [(r.metrics, r.error) for r in ref]
+    assert got[0].ok and got[1].ok          # enum fields evaluate, feasibly
+    assert "ComputingMode" in got[3].error
+    assert "BitBinding" in got[4].error
+
+
+def test_degenerate_arch_params_take_the_oracle_path():
+    """Zero DAC bits / zero bandwidths raise zero-divisions node by node
+    in the scalar path; the batched path must reproduce them verbatim
+    (it routes such points through the oracle itself)."""
+    graph = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    points = [
+        DesignPoint("WLM", "B->XBC", True, True, (("xb.dac_bits", 0),)),
+        DesignPoint("WLM", "B->XBC", True, True,
+                    (("core.l1_bw_bits", 0.0),)),
+        DesignPoint("WLM", "B->XBC", True, True),
+    ]
+    batch = assert_batch_equals_scalar(graph, arch, points)
+    assert not batch.feasible[0] and not batch.feasible[1]
+    assert batch.feasible[2]
+
+
+# ------------------------------------------------------- runner rewiring
+def test_run_jobs_proxy_path_equals_per_job_scalar():
+    """run_jobs' batched proxy grouping is a drop-in for the per-job
+    scalar evaluation it replaced: same metrics, same error strings,
+    same ordering."""
+    graph = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    points = DesignSpace(arch).points() + [
+        DesignPoint("WLM", "B->XBC", True, True,
+                    (("xb.xb_size", (32, 4)), ("xb.cell_precision", 1)))]
+    jobs = [EvalJob(index=i, graph=graph, point=p, arch=arch, proxy=True,
+                    tag="t")
+            for i, p in enumerate(points)]
+    got = run_jobs(jobs)
+    ref = sorted((_eval_job(j, None) for j in jobs), key=lambda r: r.index)
+    assert [(r.index, r.metrics, r.error, r.tag) for r in got] == \
+        [(r.index, r.metrics, r.error, r.tag) for r in ref]
+
+
+def test_proxy_memo_skips_recomputation(monkeypatch):
+    """A threaded-through memo answers repeated proxy jobs without a
+    second batched evaluation (campaigns thread one across rounds)."""
+    from repro.dse import proxy_vec
+    calls = {"n": 0}
+    real = proxy_vec.proxy_metrics_batch
+
+    def counting(graph, space, base_arch=None, **kw):
+        calls["n"] += 1
+        return real(graph, space, base_arch, **kw)
+
+    monkeypatch.setattr(proxy_vec, "proxy_metrics_batch", counting)
+    graph = get_workload("tiny_mlp")
+    arch = get_arch("toy")
+    points = DesignSpace(arch).points()
+    # duplicate jobs inside one invocation: one batch, every job answered
+    jobs = [EvalJob(index=i, graph=graph, point=points[i % 3], arch=arch,
+                    proxy=True) for i in range(9)]
+    memo: dict = {}
+    first = run_jobs(jobs, proxy_memo=memo)
+    assert calls["n"] == 1
+    assert sum(1 for k in memo if k[0] != "__pin__") == 3
+    # the memo pins the (graph, arch) pair so its id-keys stay valid
+    assert memo[("__pin__", id(graph), id(arch))] == (graph, arch)
+    # second invocation with the same memo: no new batched evaluation
+    again = run_jobs(jobs, proxy_memo=memo)
+    assert calls["n"] == 1
+    assert [(r.metrics, r.error) for r in again] == \
+        [(r.metrics, r.error) for r in first]
+
+
+# ------------------------------------------------ node tensor + reporting
+def test_node_tensor_matches_graph_queries():
+    from repro.core.cg_opt import fused_epilogue_elems
+    from repro.core.graph import n_mvm, weight_matrix_shape
+    graph = get_workload("tiny_cnn")
+    nt = NodeTensor.from_graph(graph)
+    assert nt.names == [n.name for n in graph.cim_nodes]
+    for i, node in enumerate(graph.cim_nodes):
+        r, c = weight_matrix_shape(node)
+        assert (nt.r[i], nt.c[i]) == (r, c)
+        assert nt.windows[i] == n_mvm(node, graph.shapes)
+        elems = fused_epilogue_elems(node, graph)
+        assert list(nt.epi_elems[i][:len(elems)]) == elems
+        assert not nt.epi_elems[i][len(elems):].any()
+
+
+def test_cache_stats_count_metric_only_hits(tmp_path):
+    graph = get_workload("tiny_mlp")
+    arch = get_arch("toy")
+    cache = CompileCache(tmp_path / "c")
+    key = compiler.compile_key(graph, arch)
+    assert cache.get(key) is None                      # miss
+    compiler.compile_graph(graph, arch, cache=cache)   # miss then put
+    assert cache.get(key) is not None                  # full hit
+    cache.drop_memory()
+    assert cache.get_metrics(key) is not None          # metric-only hit
+    s = cache.stats()
+    assert s["hits"] == 1 and s["metrics_hits"] == 1
+    assert s["misses"] >= 2 and s["disk_entries"] == 1
+
+
+def test_campaign_summary_surfaces_cache_stats(tmp_path):
+    arch = get_arch("toy")
+    space = DesignSpace(arch, arch_axes={"xb.xb_size": [(32, 128),
+                                                        (64, 128)]})
+    graphs = {"tiny_cnn": get_workload("tiny_cnn"),
+              "tiny_mlp": get_workload("tiny_mlp")}
+    cache = CompileCache(tmp_path / "c")
+    camp = run_campaign(graphs, space, cache=cache)
+    assert camp.cache_stats is not None
+    assert set(camp.cache_stats) == {"hits", "metrics_hits", "misses",
+                                     "disk_entries"}
+    assert "compile cache:" in camp.summary()
+    assert "metric-only hits" in camp.summary()
+    # uncached campaigns don't invent stats
+    camp2 = run_campaign({"tiny_mlp": graphs["tiny_mlp"]}, space)
+    assert camp2.cache_stats is None
+    assert "compile cache:" not in camp2.summary()
+
+
+# --------------------------------------------------- property-based sweep
+@given(rows=st.sampled_from([16, 32, 64, 128]),
+       cols=st.sampled_from([16, 32, 64, 128]),
+       cell=st.sampled_from([1, 2, 4, 8]),
+       dac=st.sampled_from([1, 2, 8]),
+       par=st.sampled_from([4, 16, 1024]),
+       cores=st.sampled_from([(1, 1), (2, 2), (4, 2)]),
+       xbs=st.sampled_from([(1, 1), (2, 2)]),
+       workload=st.sampled_from(["tiny_cnn", "tiny_mlp"]))
+@settings(max_examples=30, deadline=None)
+def test_batched_equivalence_property(rows, cols, cell, dac, par, cores,
+                                      xbs, workload):
+    graph = get_workload(workload)
+    toy = get_arch("toy")
+    arch = toy.replace(
+        chip=toy.chip.__class__(core_number=cores),
+        core=toy.core.__class__(xb_number=xbs, l1_bw_bits=1024.0),
+        xb=toy.xb.__class__(xb_size=(rows, cols), dac_bits=dac,
+                            cell_type=toy.xb.cell_type,
+                            cell_precision=cell,
+                            parallel_row=min(par, rows)))
+    assert_batch_equals_scalar(graph, arch, DesignSpace(arch).points())
+
+
+def test_empty_inputs_and_graphs_without_cim_nodes():
+    from repro.core.graph import Graph, Node
+    arch = get_arch("toy")
+    graph = get_workload("tiny_cnn")
+    empty = proxy_metrics_batch(graph, [], arch)
+    assert len(empty) == 0 and empty.metrics_list() == []
+    # a DCOM-only graph compiles to an empty placement list: the scalar
+    # path returns the degenerate bundle, the batch must match it
+    nocim = Graph("nocim", [Node("r", "Relu", ["input"], ["out"])],
+                  {"input": (4, 4, 4)}, ["out"])
+    assert_batch_equals_scalar(nocim, arch, DesignSpace(arch).points())
+
+
+def test_batched_proxy_arrays_are_consistent_with_metrics():
+    graph = get_workload("tiny_cnn")
+    arch = get_arch("toy")
+    points = DesignSpace(arch).points()
+    batch = proxy_metrics_batch(graph, points, arch)
+    ok = np.flatnonzero(batch.feasible)
+    assert ok.size
+    for i in ok[:4]:
+        m = batch.metrics(int(i))
+        assert m["latency_cycles"] == batch.latency_cycles[i]
+        assert m["crossbars_used"] == batch.crossbars_used[i]
+        assert m["fidelity"] == "proxy"
+    assert batch.metrics_list()[int(ok[0])] == batch.metrics(int(ok[0]))
