@@ -17,6 +17,7 @@ def main() -> None:
     import fig22_sensitivity
     import kernel_bench
     import roofline_table
+    import serving_bench
     import simulator_bench
 
     sections = [
@@ -28,6 +29,8 @@ def main() -> None:
         ("simulator (interpreter vs trace-lowered executor)",
          simulator_bench.rows),
         ("dse (cross-tier sweep + compile cache)", dse_sweep.rows),
+        ("serving (multi-tenant fleet vs sequential services)",
+         serving_bench.rows),
     ]
     print("name,value,note")
     for title, fn in sections:

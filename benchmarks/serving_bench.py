@@ -1,0 +1,198 @@
+"""Multi-tenant serving benchmark: one CIM fleet vs per-model sequential
+services on the same mixed request trace.
+
+The baseline is the pre-fleet deployment: one standalone
+``CimBatchService`` per model (each generously given the *whole* chip),
+processing the trace in arrival order and batching only consecutive
+same-model runs — all a sequential per-model frontend can do without
+reordering traffic.  The fleet routes the same trace through per-tenant
+deadline-aware batchers over planner-assigned crossbar partitions, so
+interleaved arrivals still fill bucketed batches and ride the
+executor's sublinear batch cost.
+
+Both sides are driven on a synthetic burst clock (all requests arrive
+at t=0; the clock advances by each measured dispatch): makespan gives
+throughput, per-request completion times give p50/p95 tails.  Dispatch
+measurements are steady-state (first use of a batch shape warms the jit
+cache untimed), and the two systems' outputs are asserted bit-exact
+against each other request by request.
+
+Emits ``BENCH_serving.json`` next to this script (override with
+``REPRO_BENCH_SERVING_JSON``; under ``REPRO_BENCH_SMOKE=1`` nothing is
+written unless the override is set).  The committed JSON is the
+regression anchor: multi-tenant throughput must stay >= 2x sequential.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from cim_common import SMOKE, get_arch, get_workload
+from repro.cimsim.functional import make_input
+from repro.serving import (CimBatchService, CimFleet, CimRequest,
+                           TenantSpec, plan_tenancy)
+from repro.serving.common import percentile
+
+
+def _mixed_trace(tenants, n: int) -> List[CimRequest]:
+    """Traffic-weighted fair interleave (Bresenham): the arrival pattern
+    of many concurrent users — per-model runs stay short, which is
+    exactly what starves a sequential per-model frontend of batches."""
+    credits = {t.name: 0.0 for t in tenants}
+    share = {t.name: t.traffic / sum(t.traffic for t in tenants)
+             for t in tenants}
+    graphs = {t.name: t.graph for t in tenants}
+    out = []
+    for i in range(n):
+        for name in credits:
+            credits[name] += share[name]
+        pick = max(credits, key=lambda k: credits[k])
+        credits[pick] -= 1.0
+        out.append(CimRequest(rid=i, model=pick,
+                              inputs=make_input(graphs[pick], i)))
+    return out
+
+
+def _run_sequential(services: Dict[str, CimBatchService],
+                    trace: List[CimRequest], max_batch: int):
+    """Arrival-order serving through per-model services; returns
+    (makespan_s, completion latencies).  Only consecutive same-model
+    runs batch (queueing *within* the burst is charged via the clock)."""
+    clock, lat = 0.0, []
+    i = 0
+    while i < len(trace):
+        j = i
+        while (j < len(trace) and trace[j].model == trace[i].model
+               and j - i < max_batch):
+            j += 1
+        batch = trace[i:j]
+        dt = services[batch[0].model].dispatch(batch)
+        clock += dt
+        lat.extend([clock] * len(batch))
+        i = j
+    return clock, lat
+
+
+def _run_fleet(fleet: CimFleet, trace: List[CimRequest]):
+    """Burst-clock fleet serving; returns (makespan_s, latencies)."""
+    for r in trace:
+        fleet.submit_request(r, now=0.0)
+    clock, lat = 0.0, []
+    while fleet.pending:
+        before = {n: fleet.pool[n].stats.serve_s for n in fleet.pool.names}
+        done = fleet.step(now=clock, force=True)
+        assert done, "fleet.step(force=True) must make progress"
+        step_s = sum(fleet.pool[n].stats.serve_s - before[n]
+                     for n in fleet.pool.names)
+        clock += step_s
+        lat.extend(clock - r.arrival_s for r in done)
+    return clock, lat
+
+
+def _measure_cell(tag: str, tenants: List[TenantSpec], arch,
+                  n_requests: int, max_batch: int = 8) -> dict:
+    plan = plan_tenancy(tenants, arch)
+    fleet = CimFleet(tenants, arch, plan=plan, max_wait_s=0.0,
+                     buckets=tuple(b for b in (1, 2, 4, 8)
+                                   if b <= max_batch))
+    services = {t.name: CimBatchService(t.graph, arch, max_batch=max_batch)
+                for t in tenants}
+
+    fleet_trace = _mixed_trace(tenants, n_requests)
+    seq_trace = _mixed_trace(tenants, n_requests)
+
+    fleet_s, fleet_lat = _run_fleet(fleet, fleet_trace)
+    seq_s, seq_lat = _run_sequential(services, seq_trace, max_batch)
+
+    graphs = {t.name: t.graph for t in tenants}
+    bit_exact = True
+    for a, b in zip(sorted(fleet_trace, key=lambda r: r.rid),
+                    sorted(seq_trace, key=lambda r: r.rid)):
+        for t in graphs[a.model].outputs:
+            if not np.array_equal(a.outputs[t], b.outputs[t]):
+                bit_exact = False
+    agg = fleet.stats().aggregate
+    return {
+        "cell": tag,
+        "tenants": [{"name": t.name, "traffic": t.traffic,
+                     "resident": plan.tenants[t.name].resident,
+                     "replicas": plan.tenants[t.name].replicas,
+                     "cores": plan.tenants[t.name].cores}
+                    for t in tenants],
+        "arch": arch.name,
+        "n_requests": n_requests,
+        "fleet_makespan_s": round(fleet_s, 4),
+        "seq_makespan_s": round(seq_s, 4),
+        "speedup": round(seq_s / fleet_s, 2) if fleet_s > 0 else None,
+        "fleet_rps": round(n_requests / fleet_s, 1) if fleet_s > 0 else None,
+        "seq_rps": round(n_requests / seq_s, 1) if seq_s > 0 else None,
+        "fleet_p50_ms": round(percentile(fleet_lat, 50) * 1e3, 3),
+        "fleet_p95_ms": round(percentile(fleet_lat, 95) * 1e3, 3),
+        "seq_p50_ms": round(percentile(seq_lat, 50) * 1e3, 3),
+        "seq_p95_ms": round(percentile(seq_lat, 95) * 1e3, 3),
+        "fleet_batches": agg.batches,
+        "xbs_used": plan.xbs_used,
+        "xbs_chip": arch.chip.n_cores * arch.core.n_xbs,
+        "bit_exact": bit_exact,
+    }
+
+
+def cells() -> list:
+    chip12 = get_arch("isaac-baseline").subarch(12, "isaac-12c")
+    out = [_measure_cell(
+        "tiny_cnn+tiny_mlp+toy/isaac-12c",
+        [TenantSpec("tiny_cnn", get_workload("tiny_cnn"), traffic=2.0),
+         TenantSpec("tiny_mlp", get_workload("tiny_mlp"), traffic=1.0),
+         TenantSpec("conv_toy", get_workload("conv_relu_toy"),
+                    traffic=1.0)],
+        chip12, n_requests=24 if SMOKE else 64)]
+    if not SMOKE:
+        # conv workloads, where executor batch cost is strongly sublinear
+        # (committed BENCH_simulator.json: resnet18@16 batch8 = 1.87x
+        # batch1).  Compute-bound f32-exact matmul stacks (ViT on CPU)
+        # scale ~linearly with batch, so the fleet's win there is
+        # co-residency and routing, not batching — the bit-exactness of
+        # that case is covered by examples/serve_cim_fleet.py.
+        out.append(_measure_cell(
+            "resnet18@16+vgg7@16+tiny_cnn/isaac",
+            [TenantSpec("resnet18", get_workload("resnet18", in_hw=16),
+                        traffic=2.0),
+             TenantSpec("vgg7", get_workload("vgg7", in_hw=16),
+                        traffic=1.0),
+             TenantSpec("tiny_cnn", get_workload("tiny_cnn"),
+                        traffic=1.0)],
+            get_arch("isaac-baseline"), n_requests=48))
+    return out
+
+
+def rows():
+    data = {"schema": 1, "smoke": SMOKE, "cells": cells()}
+    path = os.environ.get("REPRO_BENCH_SERVING_JSON")
+    if path or not SMOKE:
+        path = Path(path) if path else \
+            Path(__file__).resolve().parent / "BENCH_serving.json"
+        path.write_text(json.dumps(data, indent=2) + "\n", encoding="utf-8")
+    out = []
+    for c in data["cells"]:
+        tag = c["cell"].split("/")[0].replace("+", "_").replace("@", "")
+        out.append((f"serve_fleet_{tag}_rps", c["fleet_rps"],
+                    "multi-tenant fleet"))
+        out.append((f"serve_seq_{tag}_rps", c["seq_rps"],
+                    "sequential per-model"))
+        out.append((f"serve_speedup_{tag}_x", c["speedup"],
+                    ">=2x anchor (committed full run)"))
+        out.append((f"serve_fleet_{tag}_p95_ms", c["fleet_p95_ms"],
+                    "burst completion tail"))
+        out.append((f"serve_seq_{tag}_p95_ms", c["seq_p95_ms"], ""))
+        out.append((f"serve_bit_exact_{tag}", float(c["bit_exact"]),
+                    "fleet == sequential outputs"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, note in rows():
+        print(f"{name},{val:.4g},{note}")

@@ -187,6 +187,27 @@ class CIMArch:
     def replace(self, **kw) -> "CIMArch":
         return dataclasses.replace(self, **kw)
 
+    def subarch(self, n_cores: int, name: Optional[str] = None) -> "CIMArch":
+        """A crossbar-budget *view* of this chip: the same core and
+        crossbar tiers, but only ``n_cores`` of the chip's cores.
+
+        This is how the multi-tenant tenancy planner
+        (``serving.placement``) hands each co-resident model a feasible
+        slice of the physical crossbar pool: every compiler pass and the
+        executor see an ordinary ``CIMArch`` whose capacity is the
+        tenant's partition, so per-tenant compiles can never place
+        weights outside their budget.  Chip-shared resources (ALU rate,
+        L0 bandwidth, NoC cost) are intentionally left at chip scale —
+        partitioning them is traffic-dependent, not capacity-dependent.
+        """
+        if not 1 <= n_cores <= self.chip.n_cores:
+            raise ValueError(
+                f"subarch needs 1 <= n_cores <= {self.chip.n_cores}, "
+                f"got {n_cores}")
+        chip = dataclasses.replace(self.chip, core_number=(n_cores, 1))
+        return self.replace(chip=chip,
+                            name=name or f"{self.name}[{n_cores}c]")
+
     # ---- stable serialization (compile-cache keys, sweep manifests) ----
     def to_dict(self) -> dict:
         """JSON-safe, order-stable description of the full Abs-arch +

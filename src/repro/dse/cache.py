@@ -14,6 +14,12 @@ under the sweep runner's process pool.  Invalidation is by construction:
 changing the graph, the arch, any knob, or ``COMPILE_KEY_SCHEMA`` (bumped
 when compiler passes change behaviour) changes the key; stale entries are
 simply never addressed again.  ``clear()`` removes the directory tree.
+
+Disk growth is bounded when ``max_bytes`` is set: after each ``put`` the
+current schema's entries are LRU-evicted by access time until the total
+size fits (the entry just written is never evicted).  Long-running
+fleets and campaign farms set the knob; the default stays unbounded so
+sweep reproducibility never silently loses entries.
 """
 from __future__ import annotations
 
@@ -46,13 +52,18 @@ class CompileCache:
     disk path, and for workers that should not grow resident memory).
     """
 
-    def __init__(self, root=None, memory: bool = True):
+    def __init__(self, root=None, memory: bool = True,
+                 max_bytes: Optional[int] = None):
         self.root = Path(root) if root is not None else default_cache_dir()
         self._mem: Optional[Dict[str, CompileResult]] = {} if memory else None
         self._mem_metrics: Dict[str, Dict] = {}
+        self.max_bytes = max_bytes   # on-disk size cap (None: unbounded)
+        self._disk_total: Optional[int] = None   # running size estimate
+        self._access: Dict[str, float] = {}      # per-key last hit (any layer)
         self.hits = 0           # full CompileResult hits (get)
         self.metrics_hits = 0   # metric-only hits (get_metrics, no unpickle)
         self.misses = 0         # lookups of either kind that found nothing
+        self.evictions = 0      # entries removed by the size cap
 
     # -- paths ------------------------------------------------------------
     def _dir(self, key: str) -> Path:
@@ -65,10 +76,19 @@ class CompileCache:
         return self._dir(key) / f"{key}.json"
 
     # -- lookups ----------------------------------------------------------
+    def _touch(self, key: str) -> None:
+        """Record a hit for the size cap's LRU: memory-layer hits never
+        reach the files, so disk atimes alone would rank the *hottest*
+        entries oldest — this per-handle access map keeps them safe."""
+        if self.max_bytes is not None:
+            import time
+            self._access[key] = time.time()
+
     def get(self, key: str) -> Optional[CompileResult]:
         """Full ``CompileResult`` for ``key``, or None."""
         if self._mem is not None and key in self._mem:
             self.hits += 1
+            self._touch(key)
             return self._mem[key]
         path = self._pkl(key)
         try:
@@ -81,6 +101,7 @@ class CompileCache:
             self.misses += 1
             return None
         self.hits += 1
+        self._touch(key)
         if self._mem is not None:
             self._mem[key] = result
         return result
@@ -89,6 +110,7 @@ class CompileCache:
         """Metric bundle only — the cheap warm-sweep path (no unpickling)."""
         if key in self._mem_metrics:
             self.metrics_hits += 1
+            self._touch(key)
             return dict(self._mem_metrics[key])
         try:
             with open(self._json(key)) as f:
@@ -97,6 +119,7 @@ class CompileCache:
             self.misses += 1
             return None
         self.metrics_hits += 1
+        self._touch(key)
         self._mem_metrics[key] = metrics
         return dict(metrics)
 
@@ -118,8 +141,88 @@ class CompileCache:
         if self._mem is not None:
             self._mem[key] = result
         self._mem_metrics[key] = metrics
+        if self.max_bytes is not None:
+            # keep put O(1) while the cap is far away: maintain a running
+            # size estimate (seeded by one full scan) and rescan/evict
+            # only when it crosses the cap.  Writes by other handles are
+            # invisible until a threshold scan, so the cap is enforced
+            # per handle, not as a cross-process hard limit.
+            if self._disk_total is None:
+                self._disk_total = self.disk_bytes()
+            else:
+                for p in (self._pkl(key), self._json(key)):
+                    try:
+                        self._disk_total += p.stat().st_size
+                    except OSError:
+                        pass
+            if self._disk_total > self.max_bytes:
+                self._evict(keep=key)
 
     # -- maintenance ------------------------------------------------------
+    def disk_bytes(self) -> int:
+        """Total bytes of the current schema's on-disk entries."""
+        base = self.root / f"v{COMPILE_KEY_SCHEMA}"
+        if not base.exists():
+            return 0
+        return sum(p.stat().st_size for pat in ("*/*.pkl", "*/*.json")
+                   for p in base.glob(pat))
+
+    def _evict(self, keep: Optional[str] = None) -> None:
+        """LRU-by-atime eviction down to ``max_bytes``.
+
+        Each entry's recency is the newest of its two files' access
+        times (``get`` reads the pkl, ``get_metrics`` the json) and this
+        handle's in-process hit log (``_touch`` — memory-layer hits
+        never touch the files, so without it the hottest entries would
+        rank oldest).  On noatime/relatime mounts the on-disk component
+        degrades toward write time, turning cross-handle recency into
+        LRU-by-insertion — still bounded, just less precise.  The just-written ``keep`` entry is never evicted, so a
+        cap smaller than one entry keeps exactly the newest.  Evicted
+        keys are also dropped from the memory layer, keeping
+        ``contains``/``get`` consistent with the disk state.  The scan's
+        recount re-seeds the running ``_disk_total`` estimate, so drift
+        from overwrites or concurrent writers self-corrects here.
+        """
+        base = self.root / f"v{COMPILE_KEY_SCHEMA}"
+        if not base.exists():
+            self._disk_total = 0
+            return
+        entries = []    # (recency, key, size, paths)
+        total = 0
+        for pkl in base.glob("*/*.pkl"):
+            key = pkl.stem
+            paths = [pkl, pkl.with_suffix(".json")]
+            size = recency = 0
+            for p in paths:
+                try:
+                    st = p.stat()
+                except OSError:
+                    continue
+                size += st.st_size
+                recency = max(recency, st.st_atime, st.st_mtime)
+            recency = max(recency, self._access.get(key, 0.0))
+            entries.append((recency, key, size, paths))
+            total += size
+        if total > self.max_bytes:
+            entries.sort()                 # oldest access first
+            for _, key, size, paths in entries:
+                if total <= self.max_bytes:
+                    break
+                if key == keep:
+                    continue
+                for p in paths:
+                    try:
+                        os.unlink(p)
+                    except OSError:
+                        pass
+                if self._mem is not None:
+                    self._mem.pop(key, None)
+                self._mem_metrics.pop(key, None)
+                self._access.pop(key, None)
+                total -= size
+                self.evictions += 1
+        self._disk_total = total
+
     def drop_memory(self) -> None:
         """Forget the in-process layer (keeps disk entries)."""
         if self._mem is not None:
@@ -130,6 +233,7 @@ class CompileCache:
         """Delete every entry of the current schema from disk + memory."""
         import shutil
         self.drop_memory()
+        self._disk_total = None
         shutil.rmtree(self.root / f"v{COMPILE_KEY_SCHEMA}",
                       ignore_errors=True)
 
@@ -146,7 +250,8 @@ class CompileCache:
         if base.exists():
             disk = sum(1 for _ in base.glob("*/*.pkl"))
         return {"hits": self.hits, "metrics_hits": self.metrics_hits,
-                "misses": self.misses, "disk_entries": disk}
+                "misses": self.misses, "disk_entries": disk,
+                "evictions": self.evictions}
 
 
 def _atomic_write(path: Path, data: bytes) -> None:

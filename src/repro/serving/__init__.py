@@ -1,2 +1,13 @@
-from .server import BatchServer, Request  # noqa
-from .cim_service import CimBatchService, CimRequest, ServiceStats  # noqa
+"""Serving subsystem: shared request primitives, the LM batch server,
+the single-workload CIM batch service, and the multi-tenant CIM fleet
+(tenancy planner -> engine pool -> dynamic batcher -> router)."""
+from .common import (BaseRequest, CimRequest, LmRequest,        # noqa: F401
+                     ServiceStats)
+from .server import BatchServer, Request                        # noqa: F401
+from .cim_service import CimBatchService                        # noqa: F401
+from .placement import (TenancyPlan, TenantPlacement,           # noqa: F401
+                        TenantSpec, plan_tenancy)
+from .engine import EnginePool, points_from_campaign            # noqa: F401
+from .batcher import (DEFAULT_BUCKETS, Batch, DynamicBatcher,   # noqa: F401
+                      bucket_for)
+from .fleet import CimFleet, FleetStats                         # noqa: F401

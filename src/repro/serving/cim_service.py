@@ -7,10 +7,15 @@ device dispatch per batch instead of one interpreter walk per request.
 ``use_executor=False`` keeps the op-by-op interpreter as a
 reference/fallback path (same outputs, orders of magnitude slower),
 which is also how the service is tested.
+
+Request/stats shapes live in ``serving.common`` (shared with the LM
+batch server and the multi-tenant fleet); ``serve_padded`` is the
+fleet batcher's entry point — it pads a partial batch up to a bucket
+size so the bucket's already-traced executable is reused instead of
+tracing a new batch shape per ragged queue drain.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional
 
@@ -20,26 +25,7 @@ from ..core import compiler
 from ..core.abstraction import CIMArch
 from ..core.graph import Graph
 from ..kernels.cim_mvm import CimMvmParams, cim_mvm_params
-
-
-@dataclasses.dataclass
-class CimRequest:
-    rid: int
-    inputs: Dict[str, np.ndarray]            # unbatched graph inputs
-    # filled by the service:
-    outputs: Optional[Dict[str, np.ndarray]] = None
-    latency_s: float = 0.0
-
-
-@dataclasses.dataclass
-class ServiceStats:
-    requests: int = 0
-    batches: int = 0
-    serve_s: float = 0.0
-
-    @property
-    def requests_per_s(self) -> float:
-        return self.requests / self.serve_s if self.serve_s > 0 else 0.0
+from .common import CimRequest, ServiceStats  # noqa: F401  (re-export)
 
 
 class CimBatchService:
@@ -48,6 +34,13 @@ class CimBatchService:
     Weights default to the deterministic test weights and shifts to one
     reference calibration pass (the §4.1 verification setup); production
     embedders can pass their own ``weights``/``shifts``.
+
+    ``cache`` (a ``dse.CompileCache``) warm-loads the compiled plan from
+    disk instead of recompiling — the fleet engine pool hands every
+    tenant the campaign cache here.  ``compile_kwargs`` carries compiler
+    knob overrides (binding / use_pipeline / use_duplication, e.g. a DSE
+    best point's ``compile_kwargs()``); ``level`` stays a convenience
+    alias for the common single-knob case.
     """
 
     def __init__(self, graph: Graph, arch: CIMArch, *, level=None,
@@ -55,7 +48,9 @@ class CimBatchService:
                  params: Optional[CimMvmParams] = None,
                  weights: Optional[Dict[str, np.ndarray]] = None,
                  shifts: Optional[Dict[str, int]] = None,
-                 use_executor: bool = True):
+                 use_executor: bool = True,
+                 cache=None,
+                 compile_kwargs: Optional[Dict] = None):
         from ..cimsim.functional import (calibrate_shifts, make_input,
                                          make_weights)
         self.graph = graph
@@ -69,9 +64,11 @@ class CimBatchService:
             graph, self.weights, make_input(graph, seed), self.params)
         self.stats = ServiceStats()
         self._warmed: set = set()        # batch sizes already jit-traced
+        kwargs = dict(compile_kwargs or {})
+        kwargs.setdefault("level", level)
         if use_executor:
             from ..cimsim.executor import LoweringError, lower
-            res = compiler.compile_graph(graph, arch, level=level)
+            res = compiler.compile_graph(graph, arch, cache=cache, **kwargs)
             try:
                 self._exe = lower(res.plan, res.program, params=self.params)
                 self._packed = self._exe.pack(self.weights)
@@ -80,8 +77,8 @@ class CimBatchService:
                 self.use_executor = use_executor = False
         if not use_executor:
             from ..cimsim.functional import FunctionalSimulator
-            res = compiler.compile_graph(graph, arch, level=level,
-                                         expand=True)
+            res = compiler.compile_graph(graph, arch, cache=cache,
+                                         expand=True, **kwargs)
             self._sim = FunctionalSimulator(res.plan, res.program,
                                             self.weights, self.shifts,
                                             params=self.params)
@@ -98,30 +95,51 @@ class CimBatchService:
         done: List[CimRequest] = []
         for i in range(0, len(requests), self.max_batch):
             batch = requests[i:i + self.max_batch]
-            if self.use_executor and len(batch) not in self._warmed:
-                self._serve_batch(batch)
-                self._warmed.add(len(batch))
-            t0 = time.time()
-            self._serve_batch(batch)
-            dt = time.time() - t0
+            dt = self.dispatch(batch)
             for r in batch:
                 r.latency_s = dt
-            self.stats.batches += 1
-            self.stats.requests += len(batch)
-            self.stats.serve_s += dt
+            self.stats.record([dt] * len(batch), dt)
             done.extend(batch)
         return done
 
-    def _serve_batch(self, batch: List[CimRequest]) -> None:
+    def serve_padded(self, batch: List[CimRequest],
+                     bucket: Optional[int] = None) -> float:
+        """One bucket-shaped dispatch for ``len(batch) <= bucket``
+        requests; returns the wall time.  The fleet batcher's entry
+        point: padding to a bucket reuses that bucket's cached
+        executable instead of tracing every ragged batch size.  Fills
+        ``outputs`` but leaves latency/stats accounting to the caller
+        (the fleet adds queue wait before recording)."""
+        return self.dispatch(batch, pad_to=bucket)
+
+    def dispatch(self, batch: List[CimRequest],
+                 pad_to: Optional[int] = None) -> float:
+        """Serve one batch (warm-once per shape), return the wall time."""
+        if not batch:
+            return 0.0
+        shape = pad_to if (pad_to and self.use_executor) else len(batch)
+        if self.use_executor and shape not in self._warmed:
+            self._serve_batch(batch, pad_to=pad_to)
+            self._warmed.add(shape)
+        t0 = time.time()
+        self._serve_batch(batch, pad_to=pad_to)
+        return time.time() - t0
+
+    def _serve_batch(self, batch: List[CimRequest],
+                     pad_to: Optional[int] = None) -> None:
         if not self.use_executor:
             for r in batch:
                 out = self._sim.run({k: np.asarray(v)
                                      for k, v in r.inputs.items()})
                 r.outputs = {t: np.asarray(out[t]) for t in self.graph.outputs}
             return
-        stacked = {name: np.stack([np.asarray(r.inputs[name])
-                                   for r in batch])
-                   for name in self.graph.inputs}
+        n = len(batch)
+        pad = max(0, (pad_to or n) - n)
+        stacked = {}
+        for name in self.graph.inputs:
+            rows = [np.asarray(r.inputs[name]) for r in batch]
+            rows += [rows[-1]] * pad      # pad-to-bucket: repeat last row
+            stacked[name] = np.stack(rows)
         outs = self._exe.run_batch(stacked, packed=self._packed,
                                    shifts=self.shifts)
         for i, r in enumerate(batch):

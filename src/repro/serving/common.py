@@ -1,0 +1,135 @@
+"""Shared serving primitives: request shapes and latency accounting.
+
+One set of dataclasses serves both frontends — the LM batch server
+(``serving.server``) and the CIM fleet (``serving.cim_service`` /
+``serving.fleet``) — so request identity, deadlines and latency
+bookkeeping cannot drift between them:
+
+  * ``BaseRequest`` — identity + timing fields every service shares;
+  * ``CimRequest`` — one CIM inference (unbatched graph inputs/outputs);
+  * ``LmRequest``  — one LM generation (prompt -> token list);
+  * ``ServiceStats`` — per-service counters with p50/p95 tail latency
+    over the recorded per-request latencies.
+
+Timing model: ``arrival_s`` / ``deadline_s`` live on one caller-chosen
+clock (wall time by default; tests may inject a synthetic ``now``).
+``latency_s`` is filled by the serving layer — queue wait plus batch
+execution for fleet-routed requests, execution only for direct
+``serve()`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BaseRequest:
+    """Base request: identity plus the timing fields every service shares.
+
+    The timing fields are keyword-only so subclass payloads keep their
+    historical positional slot right after ``rid`` (``CimRequest(3,
+    inputs)`` / ``LmRequest(1, prompt)`` still bind the payload, never a
+    clock field).
+    """
+
+    rid: int
+    # submission time (service clock)
+    arrival_s: float = dataclasses.field(default=0.0, kw_only=True)
+    # absolute deadline, same clock
+    deadline_s: Optional[float] = dataclasses.field(default=None,
+                                                    kw_only=True)
+    # filled by the service
+    latency_s: float = dataclasses.field(default=0.0, kw_only=True)
+
+    def missed_deadline(self, completion_s: float) -> bool:
+        return self.deadline_s is not None and completion_s > self.deadline_s
+
+
+@dataclasses.dataclass
+class CimRequest(BaseRequest):
+    """One CIM inference request (unbatched graph inputs)."""
+
+    inputs: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    model: Optional[str] = None          # tenant id (fleet routing key)
+    # filled by the service:
+    outputs: Optional[Dict[str, np.ndarray]] = None
+
+
+@dataclasses.dataclass
+class LmRequest(BaseRequest):
+    """One LM generation request (prompt in, greedy tokens out)."""
+
+    prompt: Optional[np.ndarray] = None  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    # filled by the server:
+    output: Optional[List[int]] = None
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (0 for an empty list) — small-sample
+    friendly: p95 of 10 requests is the 10th value, not an interpolation
+    between observations that never happened."""
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    rank = max(1, int(np.ceil(q / 100.0 * len(ordered))))
+    return ordered[rank - 1]
+
+
+#: per-service cap on retained latencies: tails are computed over the
+#: most recent window so long-running fleets stay O(1) in memory and the
+#: percentiles track current behavior, not all-time history
+LATENCY_WINDOW = 4096
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Throughput counters + tail-latency accounting for one service.
+
+    ``latencies_s`` is a sliding window of the most recent
+    ``LATENCY_WINDOW`` per-request latencies — p50/p95 describe recent
+    traffic; the counters (``requests``/``batches``/...) remain
+    all-time totals.
+    """
+
+    requests: int = 0
+    batches: int = 0
+    serve_s: float = 0.0                 # busy time (batch execution)
+    deadline_misses: int = 0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, latencies_s: List[float], batch_s: float,
+               misses: int = 0) -> None:
+        """Account one served batch: per-request latencies + wall time."""
+        self.requests += len(latencies_s)
+        self.batches += 1
+        self.serve_s += batch_s
+        self.deadline_misses += misses
+        self.latencies_s.extend(latencies_s)
+        del self.latencies_s[:-LATENCY_WINDOW]
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / self.serve_s if self.serve_s > 0 else 0.0
+
+    @property
+    def p50_latency_s(self) -> float:
+        return percentile(self.latencies_s, 50.0)
+
+    @property
+    def p95_latency_s(self) -> float:
+        return percentile(self.latencies_s, 95.0)
+
+    def merge(self, other: "ServiceStats") -> "ServiceStats":
+        """Combine two stats bundles (fleet aggregate view)."""
+        return ServiceStats(
+            requests=self.requests + other.requests,
+            batches=self.batches + other.batches,
+            serve_s=self.serve_s + other.serve_s,
+            deadline_misses=self.deadline_misses + other.deadline_misses,
+            latencies_s=(self.latencies_s
+                         + other.latencies_s)[-LATENCY_WINDOW:])

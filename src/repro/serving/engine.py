@@ -1,0 +1,77 @@
+"""Tenant engine pool: warm-loaded executables behind a tenancy plan.
+
+The pool turns a ``TenancyPlan`` into running engines — one
+``CimBatchService`` per tenant, compiled against that tenant's sub-arch
+view (its crossbar partition) and trace-lowered to a jitted executable:
+
+  * **compile warm-load** — every engine compile goes through the shared
+    ``dse.CompileCache`` when one is passed, so a fleet restart (or a
+    DSE campaign that already compiled the winning point) pays a disk
+    read instead of a recompile;
+  * **executor reuse** — ``cimsim.executor.lower`` keys its process-wide
+    cache by compile content x kernel params, so two tenants serving the
+    same (graph, sub-arch, knobs) share one traced executable;
+  * **DSE handoff** — ``points_from_campaign`` maps a finished
+    ``CampaignResult`` to per-tenant compiler knobs, closing the
+    campaign -> fleet loop (the campaign's best point becomes the
+    tenant's serving configuration).
+
+Engines pre-trace their bucket shapes on demand (first dispatch per
+bucket runs once untimed inside ``CimBatchService.dispatch``), so
+steady-state fleet latencies never include jit tracing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Tuple
+
+from .cim_service import CimBatchService
+from .placement import TenancyPlan
+
+
+def points_from_campaign(campaign_result) -> Dict[str, Dict]:
+    """Per-workload compiler knobs from a DSE ``CampaignResult``.
+
+    Returns ``{workload name: compile_kwargs}`` for every workload whose
+    campaign found a feasible best point — feed it to ``EnginePool`` (or
+    ``TenantSpec.compile_kwargs``) so each tenant serves its winning
+    configuration.  Arch *overrides* of the best point are ignored here:
+    tenancy partitions one concrete chip, so only the scheduling knobs
+    transfer.
+    """
+    out: Dict[str, Dict] = {}
+    for name, outcome in campaign_result.workloads.items():
+        best = getattr(outcome, "best", None)
+        if best is not None:
+            out[name] = best.point.compile_kwargs()
+    return out
+
+
+class EnginePool:
+    """One warm engine per tenant of a ``TenancyPlan``."""
+
+    def __init__(self, plan: TenancyPlan, *, cache=None, seed: int = 0,
+                 max_batch: int = 8, use_executor: bool = True,
+                 points: Optional[Dict[str, Dict]] = None):
+        self.plan = plan
+        self.engines: Dict[str, CimBatchService] = {}
+        points = points or {}
+        for name, tenant in plan.tenants.items():
+            kwargs = dict(tenant.spec.compile_kwargs)
+            kwargs.update(points.get(name, {}))
+            self.engines[name] = CimBatchService(
+                tenant.graph, plan.subarch(name), seed=seed,
+                max_batch=max_batch, use_executor=use_executor,
+                cache=cache, compile_kwargs=kwargs)
+
+    def __getitem__(self, name: str) -> CimBatchService:
+        return self.engines[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.engines
+
+    def items(self) -> Iterator[Tuple[str, CimBatchService]]:
+        return iter(self.engines.items())
+
+    @property
+    def names(self):
+        return list(self.engines)

@@ -1,0 +1,209 @@
+"""Multi-tenant CIM serving fleet: router + batchers + engine pool.
+
+``CimFleet`` is the frontend that turns the compiler stack into a
+serving system: N workloads co-resident on one chip, each owning the
+crossbar partition the tenancy planner assigned it, fronted by a
+deadline-aware dynamic batcher and served by a warm trace-lowered
+executable.
+
+    fleet = CimFleet([TenantSpec("resnet", g1, traffic=3.0),
+                      TenantSpec("vit", g2, traffic=1.0)], arch)
+    fleet.submit("resnet", inputs)            # -> CimRequest
+    done = fleet.drain()                      # flush queues, fill outputs
+    print(fleet.stats().summary())
+
+Request lifecycle: ``submit`` stamps the arrival time and routes by
+model id; ``step`` dispatches every tenant queue whose release policy
+fires (full bucket / age / deadline pressure); ``drain`` flushes
+everything.  Per-request ``latency_s`` is queue wait plus batch
+execution; per-tenant ``ServiceStats`` (p50/p95 tails, deadline misses)
+aggregate into ``FleetStats``.
+
+The fleet is clock-agnostic like the batcher: pass explicit ``now``
+values for simulated traffic, or let it use wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.abstraction import CIMArch
+from .batcher import DEFAULT_BUCKETS, DynamicBatcher
+from .common import CimRequest, ServiceStats
+from .engine import EnginePool
+from .placement import TenancyPlan, TenantSpec, plan_tenancy
+
+
+@dataclasses.dataclass
+class FleetStats:
+    """Per-tenant stats plus the fleet-wide aggregate."""
+
+    tenants: Dict[str, ServiceStats]
+
+    @property
+    def aggregate(self) -> ServiceStats:
+        total = ServiceStats()
+        for s in self.tenants.values():
+            total = total.merge(s)
+        return total
+
+    def summary(self) -> str:
+        agg = self.aggregate
+        lines = [f"fleet: {agg.requests} requests in {agg.batches} batches; "
+                 f"p50 {agg.p50_latency_s * 1e3:.2f}ms / "
+                 f"p95 {agg.p95_latency_s * 1e3:.2f}ms; "
+                 f"{agg.deadline_misses} deadline misses"]
+        for name, s in self.tenants.items():
+            lines.append(f"  {name}: {s.requests} reqs / {s.batches} batches,"
+                         f" p50 {s.p50_latency_s * 1e3:.2f}ms,"
+                         f" p95 {s.p95_latency_s * 1e3:.2f}ms")
+        return "\n".join(lines)
+
+
+class CimFleet:
+    """Serve N workloads on one CIM chip behind one frontend."""
+
+    def __init__(self, tenants: Sequence[TenantSpec], arch: CIMArch, *,
+                 plan: Optional[TenancyPlan] = None,
+                 cache=None, seed: int = 0,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_wait_s: float = 0.002,
+                 use_executor: bool = True,
+                 points: Optional[Dict[str, Dict]] = None):
+        if plan is None:
+            plan = plan_tenancy(tenants, arch)
+        else:
+            # an explicit plan must describe exactly these tenants on this
+            # chip — a stale plan would silently serve the wrong fleet.
+            # The engines run from the plan's embedded specs, so the
+            # caller's specs must match them in substance (graph, knobs,
+            # traffic), not just by name.
+            by_name = {t.name: t for t in tenants}
+            if set(plan.tenants) != set(by_name):
+                raise ValueError(
+                    f"plan tenants {sorted(plan.tenants)} != specs "
+                    f"{sorted(by_name)}")
+            if plan.arch.to_dict() != arch.to_dict():
+                raise ValueError(
+                    f"plan was built for arch {plan.arch.name!r}, "
+                    f"fleet got {arch.name!r}")
+            for name, spec in by_name.items():
+                ps = plan.tenants[name].spec
+                if ps is spec:
+                    continue
+                if (ps.traffic != spec.traffic
+                        or ps.compile_kwargs != spec.compile_kwargs
+                        or ps.graph.to_dict() != spec.graph.to_dict()):
+                    raise ValueError(
+                        f"plan tenant {name!r} was planned from a "
+                        "different spec (graph/knobs/traffic) than the "
+                        "one passed to the fleet")
+        self.plan = plan
+        self.plan.validate()
+        self.pool = EnginePool(self.plan, cache=cache, seed=seed,
+                               max_batch=max(buckets),
+                               use_executor=use_executor, points=points)
+        # deadline pressure uses observed dispatch times; before a
+        # tenant's first dispatch the estimate is unknown (None), which
+        # the batcher treats as "release deadlined work immediately" —
+        # simulated cycles don't convert to wall time, so not waiting is
+        # the only estimate-free way to avoid cold-start deadline misses
+        self._batchers: Dict[str, DynamicBatcher] = {}
+        self._observed_s: Dict[str, float] = {}
+        for name in self.pool.names:
+            self._batchers[name] = DynamicBatcher(
+                buckets=tuple(buckets), max_wait_s=max_wait_s,
+                est_batch_s=lambda n, t=name: self._observed_s.get(t))
+        self._rid = 0
+
+    # -- admission -------------------------------------------------------
+    def submit(self, model: str, inputs: Dict[str, np.ndarray], *,
+               deadline_s: Optional[float] = None,
+               now: Optional[float] = None) -> CimRequest:
+        """Admit one request for ``model``; returns the queued request."""
+        if model not in self.pool:
+            raise KeyError(f"unknown model {model!r}; "
+                           f"tenants: {self.pool.names}")
+        now = time.monotonic() if now is None else now
+        req = CimRequest(rid=self._rid, inputs=inputs, model=model,
+                         arrival_s=now, deadline_s=deadline_s)
+        self._rid += 1
+        self._batchers[model].submit(req)
+        return req
+
+    def submit_request(self, req: CimRequest,
+                       now: Optional[float] = None) -> CimRequest:
+        """Admit a pre-built request (its ``model`` field routes it)."""
+        if req.model not in self.pool:
+            raise KeyError(f"unknown model {req.model!r}; "
+                           f"tenants: {self.pool.names}")
+        req.arrival_s = time.monotonic() if now is None else now
+        self._batchers[req.model].submit(req)
+        return req
+
+    @property
+    def pending(self) -> int:
+        return sum(len(b) for b in self._batchers.values())
+
+    # -- dispatch --------------------------------------------------------
+    def step(self, now: Optional[float] = None,
+             force: bool = False) -> List[CimRequest]:
+        """Dispatch every tenant queue whose release policy fires.
+
+        Returns the requests completed this step (outputs + latency
+        filled).  ``force=True`` releases partial batches regardless of
+        the policy (one bucketed batch per tenant per call).
+        """
+        now = time.monotonic() if now is None else now
+        done: List[CimRequest] = []
+        for name, batcher in self._batchers.items():
+            batch = batcher.next_batch(now, force=force)
+            if batch is None:
+                continue
+            done.extend(self._dispatch(name, batch, now))
+        return done
+
+    def drain(self, now: Optional[float] = None) -> List[CimRequest]:
+        """Flush every queue to empty (bucketed batches throughout)."""
+        now = time.monotonic() if now is None else now
+        done: List[CimRequest] = []
+        for name, batcher in self._batchers.items():
+            for batch in batcher.drain(now):
+                done.extend(self._dispatch(name, batch, now))
+        return done
+
+    def serve(self, requests: Iterable[CimRequest],
+              now: Optional[float] = None) -> List[CimRequest]:
+        """Synchronous convenience: admit every request, then drain.
+
+        Requests are routed by their ``model`` field; arrival times are
+        stamped at admission (pass ``now`` for a synthetic clock).
+        """
+        for r in requests:
+            self.submit_request(r, now=now)
+        return self.drain(now=now)
+
+    def _dispatch(self, name: str, batch, now: float) -> List[CimRequest]:
+        engine = self.pool[name]
+        dt = engine.serve_padded(batch.requests, batch.bucket)
+        # steady-state estimate feeding the deadline-pressure policy
+        prev = self._observed_s.get(name)
+        self._observed_s[name] = dt if prev is None else 0.5 * (prev + dt)
+        latencies, misses = [], 0
+        for r in batch.requests:
+            r.latency_s = (now - r.arrival_s) + dt
+            latencies.append(r.latency_s)
+            misses += r.missed_deadline(now + dt)
+        engine.stats.record(latencies, dt, misses)
+        return batch.requests
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> FleetStats:
+        return FleetStats(tenants={name: self.pool[name].stats
+                                   for name in self.pool.names})
+
+    def summary(self) -> str:
+        return self.plan.summary() + "\n" + self.stats().summary()

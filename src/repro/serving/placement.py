@@ -1,0 +1,274 @@
+"""Crossbar tenancy planner: partition one CIM chip across N models.
+
+CIM serving is a *mapping* problem before it is a scheduling problem:
+weights are stationary in crossbars, so which model owns which share of
+the crossbar pool decides everything downstream — replica counts for hot
+models, weight-rewrite time-multiplexing for cold ones, and whether a
+request ever meets its deadline.  The planner answers that question with
+the same machinery the compiler uses inside one model:
+
+  1. **Footprint + service time** per tenant come from the real cost
+     model: ``cg_opt.CostModel.placement`` / ``mapping.bind`` give the
+     cores one resident copy occupies, and
+     ``cg_opt.estimate_segment_cycles`` the pipelined cycles one copy
+     needs per request.
+  2. **Residency** is greedy by traffic: tenants are admitted resident
+     (weights programmed once) in descending traffic order while their
+     footprint fits, always reserving at least one core for every tenant
+     still waiting.  Tenants that do not fit are *time-multiplexed*:
+     their partition is smaller than one copy, so their compile becomes
+     multi-segment and reprograms crossbars per inference — exactly the
+     compiler's existing segmentation path, now used as a tenancy tier.
+  3. **Replicas** for resident tenants reuse ``balance_duplication``
+     verbatim: each tenant is presented to the CG duplication search as
+     one pseudo-operator whose ``n_mvm`` is its traffic weight and whose
+     ``t_window`` is its per-request service cycles, with one copy
+     costing its footprint in cores.  The min-bottleneck search then
+     equalizes per-replica offered load — hot models get duplicated
+     copies, and the leftover-spending pass hands spare cores to
+     whichever tenant is slowest, the same way it does for operators.
+
+  The result is a ``TenancyPlan`` whose per-tenant ``CIMArch`` views
+  (``CIMArch.subarch``) provably sum to at most the chip's crossbar
+  pool (``TenancyPlan.validate``, asserted in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+from ..core.abstraction import CIMArch
+from ..core.cg_opt import CostModel, balance_duplication, \
+    estimate_segment_cycles
+from ..core.graph import Graph
+from ..core.mapping import BitBinding
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One co-resident model: its graph and relative traffic share."""
+
+    name: str
+    graph: Graph
+    traffic: float = 1.0             # relative request rate (any scale)
+    #: compiler knob overrides for this tenant (level / binding /
+    #: use_pipeline / use_duplication), e.g. a DSE campaign best point's
+    #: ``DesignPoint.compile_kwargs()``
+    compile_kwargs: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.traffic <= 0:
+            raise ValueError(f"tenant {self.name!r}: traffic must be > 0")
+
+
+@dataclasses.dataclass
+class TenantPlacement:
+    """The planner's verdict for one tenant."""
+
+    spec: TenantSpec
+    cores: int                       # cores in this tenant's partition
+    xbs: int                         # crossbars in the partition
+    replicas: int                    # resident weight copies (>= 1)
+    resident: bool                   # False -> time-multiplexed (rewrites)
+    footprint_cores: int             # cores one resident copy needs
+    est_cycles_per_req: float        # one copy, pipelined, no duplication
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def graph(self) -> Graph:
+        return self.spec.graph
+
+
+@dataclasses.dataclass
+class TenancyPlan:
+    """A budget-respecting partition of one chip across tenants."""
+
+    arch: CIMArch
+    tenants: Dict[str, TenantPlacement]
+
+    @property
+    def cores_used(self) -> int:
+        return sum(t.cores for t in self.tenants.values())
+
+    @property
+    def xbs_used(self) -> int:
+        return sum(t.xbs for t in self.tenants.values())
+
+    def subarch(self, name: str) -> CIMArch:
+        """The tenant's compiler-facing ``CIMArch`` view (its partition)."""
+        t = self.tenants[name]
+        return self.arch.subarch(t.cores, f"{self.arch.name}/{name}")
+
+    def validate(self) -> None:
+        """Assert the plan respects the physical chip, tenant by tenant."""
+        chip_xbs = self.arch.chip.n_cores * self.arch.core.n_xbs
+        if self.cores_used > self.arch.chip.n_cores:
+            raise AssertionError(
+                f"plan uses {self.cores_used} cores > chip "
+                f"{self.arch.chip.n_cores}")
+        if self.xbs_used > chip_xbs:
+            raise AssertionError(
+                f"plan uses {self.xbs_used} crossbars > chip {chip_xbs}")
+        for t in self.tenants.values():
+            if t.cores < 1:
+                raise AssertionError(f"tenant {t.name} got no cores")
+            if t.resident and t.cores < t.replicas * t.footprint_cores:
+                raise AssertionError(
+                    f"tenant {t.name}: {t.replicas} replicas x "
+                    f"{t.footprint_cores} cores > partition {t.cores}")
+
+    def summary(self) -> str:
+        chip_xbs = self.arch.chip.n_cores * self.arch.core.n_xbs
+        lines = [f"tenancy on {self.arch.name}: {self.cores_used}/"
+                 f"{self.arch.chip.n_cores} cores, {self.xbs_used}/"
+                 f"{chip_xbs} crossbars"]
+        for t in sorted(self.tenants.values(),
+                        key=lambda p: -p.spec.traffic):
+            kind = (f"resident x{t.replicas}" if t.resident
+                    else "time-multiplexed")
+            lines.append(
+                f"  {t.name}: traffic {t.spec.traffic:g} -> {t.cores} cores "
+                f"({t.xbs} xbs), {kind} "
+                f"[footprint {t.footprint_cores}c, "
+                f"~{t.est_cycles_per_req:.0f}cy/req]")
+        return "\n".join(lines)
+
+
+def _tenant_profile(spec: TenantSpec, arch: CIMArch) -> tuple:
+    """(footprint cores, pipelined cycles/request at one copy, placements).
+
+    The real cost model, not a heuristic: ``CostModel.placement`` runs
+    ``mapping.bind`` per CIM node, so the footprint is exactly the cores
+    one resident weight copy occupies under this tenant's binding.
+    """
+    binding = spec.compile_kwargs.get("binding", BitBinding.B_TO_XBC)
+    if isinstance(binding, str):
+        binding = BitBinding(binding)
+    cm = CostModel(arch, binding)
+    pls = [cm.placement(node, spec.graph) for node in spec.graph.cim_nodes]
+    footprint = sum(p.cores for p in pls)
+    use_pipeline = bool(spec.compile_kwargs.get("use_pipeline", True))
+    cycles = estimate_segment_cycles(pls, use_pipeline)
+    return max(1, footprint), max(1.0, cycles), pls
+
+
+def _traffic_weights(tenants: Sequence[TenantSpec],
+                     scale: int = 10_000) -> List[int]:
+    """Integer traffic weights for the duplication search's ``n_mvm``.
+
+    ``balance_duplication`` caps a pseudo-op's replicas at its ``n_mvm``,
+    so the hottest tenant gets ``scale`` quanta — far above any physical
+    core count — and the rest are proportional (>= 1)."""
+    top = max(t.traffic for t in tenants)
+    return [max(1, round(t.traffic / top * scale)) for t in tenants]
+
+
+def plan_tenancy(tenants: Sequence[TenantSpec], arch: CIMArch, *,
+                 min_cores: int = 1) -> TenancyPlan:
+    """Partition ``arch``'s crossbar pool across ``tenants``.
+
+    Deterministic: ties in traffic resolve by input order.  Raises if
+    the chip cannot give every tenant ``min_cores`` cores; any other
+    overload degrades to time-multiplexing, never to rejection.
+    """
+    tenants = list(tenants)
+    if not tenants:
+        raise ValueError("plan_tenancy needs at least one tenant")
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"tenant names must be unique, got {names}")
+    budget = arch.chip.n_cores
+    if budget < min_cores * len(tenants):
+        raise ValueError(
+            f"chip has {budget} cores < {min_cores} x {len(tenants)} tenants")
+
+    profiles = {t.name: _tenant_profile(t, arch) for t in tenants}
+
+    # -- residency: traffic-desc greedy with a reservation for the rest --
+    order = sorted(range(len(tenants)),
+                   key=lambda i: (-tenants[i].traffic, i))
+    resident: List[TenantSpec] = []
+    multiplexed: List[TenantSpec] = []
+    remaining = budget
+    for rank, i in enumerate(order):
+        spec = tenants[i]
+        footprint = profiles[spec.name][0]
+        reserve = min_cores * (len(order) - rank - 1)   # tenants after this
+        if footprint <= remaining - reserve:
+            resident.append(spec)
+            remaining -= footprint
+        else:
+            multiplexed.append(spec)
+            remaining -= min_cores
+    resident_names = {t.name for t in resident}
+
+    # -- partition sizes ------------------------------------------------
+    cores: Dict[str, int] = {}
+    pos = {t.name: i for i, t in enumerate(tenants)}
+    if multiplexed:
+        # the multiplexed group gets cores proportional to its share of
+        # the offered load (traffic x service cycles), floored at
+        # min_cores each and capped so residents keep their footprints
+        load = {t.name: t.traffic * profiles[t.name][1] for t in tenants}
+        total_load = sum(load.values())
+        mult_load = sum(load[t.name] for t in multiplexed)
+        resident_floor = sum(profiles[t.name][0] for t in resident)
+        pool = round(budget * mult_load / total_load)
+        pool = max(min_cores * len(multiplexed),
+                   min(pool, budget - resident_floor))
+        shares = sorted(multiplexed, key=lambda t: (-load[t.name],
+                                                    pos[t.name]))
+        left = pool
+        for k, spec in enumerate(shares):
+            rest = len(shares) - k - 1
+            c = max(min_cores,
+                    math.floor(pool * load[spec.name] / mult_load))
+            c = min(c, left - min_cores * rest)
+            cores[spec.name] = c
+            left -= c
+        cores[shares[0].name] += left          # remainder to the hottest
+        resident_budget = budget - pool
+    else:
+        resident_budget = budget
+
+    # -- replicas for residents: the CG duplication search verbatim -----
+    replicas = {t.name: 1 for t in resident}
+    for spec in resident:
+        cores[spec.name] = profiles[spec.name][0]
+    searchable = [t for t in resident if profiles[t.name][2]]
+    if searchable:
+        weights = _traffic_weights(searchable)
+        fixed = sum(profiles[t.name][0] for t in resident
+                    if not profiles[t.name][2])
+        pseudo = []
+        for spec, w in zip(searchable, weights):
+            footprint, cycles, pls = profiles[spec.name]
+            # one pseudo-operator per tenant: n_mvm = traffic quanta,
+            # t_window = service cycles (via t_load; phases=row_groups=1),
+            # one copy costs the tenant's footprint in cores
+            p = dataclasses.replace(pls[0], n_mvm=w, cores=footprint,
+                                    phases=1, row_groups=1, row_spread=1,
+                                    t_load=float(cycles), alu_epilogue=0.0,
+                                    dup=1)
+            pseudo.append(p)
+        balance_duplication(pseudo, resident_budget - fixed, unit="cores")
+        for spec, p in zip(searchable, pseudo):
+            replicas[spec.name] = p.dup
+            cores[spec.name] = p.dup * profiles[spec.name][0]
+
+    placements = {}
+    for spec in tenants:
+        footprint, cycles, _ = profiles[spec.name]
+        placements[spec.name] = TenantPlacement(
+            spec=spec, cores=cores[spec.name],
+            xbs=cores[spec.name] * arch.core.n_xbs,
+            replicas=replicas.get(spec.name, 1),
+            resident=spec.name in resident_names,
+            footprint_cores=footprint, est_cycles_per_req=cycles)
+    plan = TenancyPlan(arch=arch, tenants=placements)
+    plan.validate()
+    return plan

@@ -9,10 +9,9 @@ this ``serve_step``).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import deque
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -20,17 +19,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import lm
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray              # (prompt_len,) int32
-    max_new_tokens: int = 16
-    eos: Optional[int] = None
-    # filled by the server:
-    output: Optional[List[int]] = None
-    latency_s: float = 0.0
+from .common import LmRequest as Request  # shared serving primitives
 
 
 class BatchServer:

@@ -35,6 +35,21 @@ def test_dse_doc_snippets_execute(tmp_path, monkeypatch):
     assert ns["camp"].full_evals <= ns["camp"].exhaustive_evals // 3
 
 
+def test_serving_doc_snippets_execute(tmp_path, monkeypatch):
+    import tempfile
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", str(tmp_path / "cache"))
+    monkeypatch.setattr(tempfile, "tempdir", str(tmp_path))
+    blocks = python_blocks(REPO / "docs" / "SERVING.md")
+    assert len(blocks) >= 5, "docs/SERVING.md lost its executable snippets"
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        code = compile(block, f"docs/SERVING.md[python block {i}]", "exec")
+        exec(code, ns)   # noqa: S102 — executing our own documentation
+    # the guide's narrative claims, re-checked here explicitly
+    assert ns["plan"].cores_used <= ns["arch"].chip.n_cores
+    assert ns["fleet"].stats().aggregate.requests >= 9
+
+
 def test_architecture_doc_mentions_every_package():
     text = (REPO / "docs" / "ARCHITECTURE.md").read_text(encoding="utf-8")
     src = REPO / "src" / "repro"

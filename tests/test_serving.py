@@ -1,0 +1,398 @@
+"""Multi-tenant CIM serving fleet: tenancy planner budget invariants,
+deadline-aware bucketed batching, fleet-vs-standalone bit-exactness,
+CimBatchService edge cases, and the compile-cache size cap."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.cimsim.functional import make_input
+from repro.core.abstraction import get_arch
+from repro.serving import (CimBatchService, CimFleet, CimRequest,
+                           DynamicBatcher, ServiceStats, TenantSpec,
+                           bucket_for, plan_tenancy)
+from repro.workloads import get_workload
+
+ISAAC = get_arch("isaac-baseline")
+CHIP8 = ISAAC.subarch(8, "isaac-8c")        # small planner playground
+CNN = get_workload("tiny_cnn")
+MLP = get_workload("tiny_mlp")
+
+
+def _tenants(traffic_cnn=3.0, traffic_mlp=1.0):
+    return [TenantSpec("cnn", CNN, traffic=traffic_cnn),
+            TenantSpec("mlp", MLP, traffic=traffic_mlp)]
+
+
+def _mixed_trace(n, models=("cnn", "mlp")):
+    graphs = {"cnn": CNN, "mlp": MLP}
+    return [CimRequest(rid=i, model=models[i % len(models)],
+                       inputs=make_input(graphs[models[i % len(models)]], i))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------- planner
+
+def test_plan_respects_chip_budget_across_mixes():
+    chip_xbs = CHIP8.chip.n_cores * CHIP8.core.n_xbs
+    for tc, tm in ((1, 1), (10, 1), (1, 10), (7, 3), (100, 1)):
+        plan = plan_tenancy(_tenants(tc, tm), CHIP8)
+        assert plan.cores_used <= CHIP8.chip.n_cores
+        assert plan.xbs_used <= chip_xbs
+        plan.validate()                  # raises on any violation
+        for t in plan.tenants.values():
+            assert t.cores >= 1
+            assert t.xbs == t.cores * CHIP8.core.n_xbs
+
+
+def test_hot_tenant_gets_replicas():
+    plan = plan_tenancy(_tenants(8.0, 1.0), CHIP8)
+    hot, cold = plan.tenants["cnn"], plan.tenants["mlp"]
+    assert hot.resident and cold.resident
+    assert hot.replicas >= 2             # duplicated copies for the hot model
+    assert hot.replicas >= cold.replicas
+    assert hot.cores >= hot.replicas * hot.footprint_cores
+
+
+def test_over_capacity_tenant_is_time_multiplexed():
+    # resnet18's footprint dwarfs a 4-core slice of the ISAAC chip, so it
+    # must fall back to weight-rewrite time multiplexing while the tiny
+    # tenant stays resident
+    chip4 = ISAAC.subarch(4, "isaac-4c")
+    big = get_workload("resnet18", in_hw=16)
+    plan = plan_tenancy([TenantSpec("resnet", big, traffic=1.0),
+                         TenantSpec("mlp", MLP, traffic=1.0)], chip4)
+    assert not plan.tenants["resnet"].resident
+    assert plan.tenants["mlp"].resident
+    assert plan.cores_used <= 4
+    plan.validate()
+
+
+def test_planner_input_validation():
+    with pytest.raises(ValueError, match="unique"):
+        plan_tenancy([TenantSpec("a", MLP), TenantSpec("a", MLP)], CHIP8)
+    with pytest.raises(ValueError, match="at least one"):
+        plan_tenancy([], CHIP8)
+    with pytest.raises(ValueError, match="traffic"):
+        TenantSpec("a", MLP, traffic=0.0)
+    two_core = ISAAC.subarch(2)
+    with pytest.raises(ValueError, match="cores"):
+        plan_tenancy([TenantSpec(str(i), MLP) for i in range(3)], two_core)
+
+
+def test_subarch_view():
+    sub = ISAAC.subarch(12)
+    assert sub.chip.n_cores == 12
+    assert sub.xb == ISAAC.xb            # crossbar tier untouched
+    assert sub.core == ISAAC.core
+    assert sub.mode == ISAAC.mode
+    with pytest.raises(ValueError):
+        ISAAC.subarch(0)
+    with pytest.raises(ValueError):
+        ISAAC.subarch(ISAAC.chip.n_cores + 1)
+
+
+def test_validate_catches_corrupt_plan():
+    plan = plan_tenancy(_tenants(), CHIP8)
+    plan.tenants["cnn"].cores = CHIP8.chip.n_cores + 5
+    plan.tenants["cnn"].xbs = plan.tenants["cnn"].cores * CHIP8.core.n_xbs
+    with pytest.raises(AssertionError):
+        plan.validate()
+
+
+# ---------------------------------------------------------------- batcher
+
+def test_bucket_for_ladder():
+    buckets = (1, 2, 4, 8)
+    assert [bucket_for(n, buckets) for n in (1, 2, 3, 5, 8, 20)] == \
+        [1, 2, 4, 8, 8, 8]
+
+
+def test_batcher_release_policy():
+    b = DynamicBatcher(buckets=(1, 2, 4), max_wait_s=1.0, est_batch_s=0.1)
+    assert b.release_reason(now=0.0) is None            # empty queue
+    for i in range(2):
+        b.submit(CimRequest(rid=i, arrival_s=0.0))
+    assert b.release_reason(now=0.5) is None            # young, no deadline
+    assert b.release_reason(now=1.5) == "age"
+    b.submit(CimRequest(rid=2, arrival_s=0.5))
+    b.submit(CimRequest(rid=3, arrival_s=0.5))
+    assert b.release_reason(now=0.6) == "full"          # 4 >= max bucket
+    batch = b.next_batch(now=0.6)
+    assert batch.reason == "full" and batch.bucket == 4 and len(batch) == 4
+    assert len(b) == 0
+    # deadline pressure: slack smaller than estimated service time
+    b.submit(CimRequest(rid=4, arrival_s=0.0, deadline_s=0.15))
+    assert b.release_reason(now=0.1) == "deadline"
+
+
+def test_batcher_pops_edf_order_and_drains():
+    b = DynamicBatcher(buckets=(1, 2), max_wait_s=10.0)
+    b.submit(CimRequest(rid=0, arrival_s=0.0, deadline_s=9.0))
+    b.submit(CimRequest(rid=1, arrival_s=0.1, deadline_s=1.0))
+    b.submit(CimRequest(rid=2, arrival_s=0.2))          # no deadline: last
+    batches = b.drain(now=0.3)
+    order = [r.rid for batch in batches for r in batch.requests]
+    assert order == [1, 0, 2]                           # EDF, then arrival
+    assert [batch.reason for batch in batches] == ["full", "flush"]
+    assert b.drain(now=1.0) == []                       # empty queue: no-op
+    with pytest.raises(ValueError):
+        DynamicBatcher(buckets=(4, 2))                  # unsorted ladder
+
+
+def test_request_positional_payload_binding():
+    # the pre-common.py signatures: payload right after rid, clock fields
+    # keyword-only so they can never silently swallow a payload
+    from repro.serving import Request
+    r = CimRequest(3, {"x": np.zeros(2)})
+    assert r.rid == 3 and "x" in r.inputs and r.arrival_s == 0.0
+    q = Request(1, np.arange(5), 16)
+    assert q.prompt.shape == (5,) and q.max_new_tokens == 16
+    with pytest.raises(TypeError):
+        CimRequest(3, {"x": np.zeros(2)}, "cnn", None, 1.0)  # clock field
+
+
+def test_service_stats_latency_window_is_bounded():
+    from repro.serving.common import LATENCY_WINDOW
+    s = ServiceStats()
+    for _ in range(3):
+        s.record([1.0] * LATENCY_WINDOW, batch_s=1.0)
+    assert s.requests == 3 * LATENCY_WINDOW      # counters stay all-time
+    assert len(s.latencies_s) == LATENCY_WINDOW  # tails stay windowed
+    assert len(s.merge(s).latencies_s) == LATENCY_WINDOW
+
+
+def test_fleet_rejects_mismatched_plan():
+    plan = plan_tenancy(_tenants(), CHIP8)
+    with pytest.raises(ValueError, match="plan tenants"):
+        CimFleet([TenantSpec("other", MLP)], CHIP8, plan=plan)
+    with pytest.raises(ValueError, match="built for arch"):
+        CimFleet(_tenants(), ISAAC.subarch(16), plan=plan)
+    # same names but different substance (graph swapped) must not pass
+    swapped = [TenantSpec("cnn", MLP, traffic=3.0),
+               TenantSpec("mlp", MLP, traffic=1.0)]
+    with pytest.raises(ValueError, match="different spec"):
+        CimFleet(swapped, CHIP8, plan=plan)
+
+
+def test_batcher_unknown_service_time_releases_deadlined_work():
+    b = DynamicBatcher(buckets=(1, 4), max_wait_s=100.0, est_batch_s=None)
+    b.submit(CimRequest(rid=0, arrival_s=0.0))
+    assert b.release_reason(now=0.0) is None     # no deadline: wait
+    b.submit(CimRequest(rid=1, arrival_s=0.0, deadline_s=1e9))
+    assert b.release_reason(now=0.0) == "deadline"   # unknown est: go now
+
+
+def test_service_stats_tails_and_merge():
+    s = ServiceStats()
+    s.record([i / 100.0 for i in range(1, 101)], batch_s=1.0)
+    assert s.p50_latency_s == pytest.approx(0.50)
+    assert s.p95_latency_s == pytest.approx(0.95)
+    t = ServiceStats()
+    t.record([10.0], batch_s=2.0, misses=1)
+    m = s.merge(t)
+    assert m.requests == 101 and m.batches == 2
+    assert m.deadline_misses == 1 and m.serve_s == 3.0
+    assert ServiceStats().p95_latency_s == 0.0
+
+
+# ------------------------------------------------------------------ fleet
+
+def test_fleet_bit_exact_vs_standalone_reference():
+    tenants = _tenants()
+    fleet = CimFleet(tenants, CHIP8, max_wait_s=0.0)
+    done = fleet.serve(_mixed_trace(10), now=0.0)
+    assert len(done) == 10
+    for name, g in (("cnn", CNN), ("mlp", MLP)):
+        mine = [r for r in done if r.model == name]
+        # reference 1: standalone service on the tenant's own sub-arch
+        sub = CimBatchService(g, fleet.plan.subarch(name), max_batch=8)
+        # reference 2: standalone service on the whole chip
+        full = CimBatchService(g, CHIP8, max_batch=8)
+        for ref in (sub, full):
+            refs = [CimRequest(rid=r.rid, inputs=r.inputs) for r in mine]
+            ref.serve(refs)
+            for a, b in zip(mine, refs):
+                for t in g.outputs:
+                    np.testing.assert_array_equal(a.outputs[t],
+                                                  b.outputs[t])
+
+
+def test_fleet_interpreter_fallback_parity():
+    # use_executor=False drives the same batcher/padding path through the
+    # op-by-op interpreter; outputs must be identical
+    tenants = _tenants()
+    fast = CimFleet(tenants, CHIP8, max_wait_s=0.0)
+    slow = CimFleet(tenants, CHIP8, max_wait_s=0.0, use_executor=False)
+    a = fast.serve(_mixed_trace(6), now=0.0)
+    b = slow.serve(_mixed_trace(6), now=0.0)
+    graphs = {"cnn": CNN, "mlp": MLP}
+    for ra, rb in zip(a, b):
+        assert ra.rid == rb.rid
+        for t in graphs[ra.model].outputs:
+            np.testing.assert_array_equal(ra.outputs[t], rb.outputs[t])
+
+
+def test_fleet_stats_and_deadline_accounting():
+    fleet = CimFleet(_tenants(), CHIP8, max_wait_s=0.0)
+    reqs = _mixed_trace(4)
+    for r in reqs:
+        r.deadline_s = -1.0          # already past at dispatch time
+    done = fleet.serve(reqs, now=0.0)
+    st = fleet.stats()
+    agg = st.aggregate
+    assert agg.requests == 4
+    assert agg.deadline_misses == 4
+    assert agg.p50_latency_s > 0.0
+    assert all(r.latency_s > 0 for r in done)
+    assert "deadline misses" in fleet.summary()
+
+
+def test_fleet_routing_and_step():
+    fleet = CimFleet(_tenants(), CHIP8, buckets=(1, 2), max_wait_s=10.0)
+    with pytest.raises(KeyError):
+        fleet.submit("nope", {})
+    fleet.submit("cnn", make_input(CNN, 0), now=0.0)
+    assert fleet.pending == 1
+    assert fleet.step(now=0.0) == []         # young + partial: keep waiting
+    fleet.submit("cnn", make_input(CNN, 1), now=0.0)
+    done = fleet.step(now=0.0)               # bucket 2 is full now
+    assert len(done) == 2 and fleet.pending == 0
+
+
+# ----------------------------------------------- CimBatchService edge cases
+
+def test_service_empty_flush_is_noop():
+    svc = CimBatchService(MLP, CHIP8, max_batch=4)
+    assert svc.serve([]) == []
+    assert svc.stats.requests == 0 and svc.stats.batches == 0
+    assert svc.dispatch([]) == 0.0
+    fleet = CimFleet(_tenants(), CHIP8)
+    assert fleet.drain(now=0.0) == []        # empty queues: no batches
+    assert fleet.stats().aggregate.batches == 0
+
+
+def test_service_batch_larger_than_max_batch_splits():
+    svc = CimBatchService(MLP, CHIP8, max_batch=4)
+    reqs = [CimRequest(rid=i, inputs=make_input(MLP, i)) for i in range(11)]
+    done = svc.serve(reqs)
+    assert len(done) == 11
+    assert svc.stats.batches == 3            # 4 + 4 + 3
+    assert svc.stats.requests == 11
+    ref = CimBatchService(MLP, CHIP8, max_batch=4, use_executor=False)
+    refs = [CimRequest(rid=i, inputs=make_input(MLP, i)) for i in range(11)]
+    ref.serve(refs)
+    for a, b in zip(done, refs):
+        for t in MLP.outputs:
+            np.testing.assert_array_equal(a.outputs[t], b.outputs[t])
+
+
+def test_serve_padded_matches_unpadded():
+    svc = CimBatchService(MLP, CHIP8, max_batch=8)
+    reqs = [CimRequest(rid=i, inputs=make_input(MLP, i)) for i in range(3)]
+    svc.serve_padded(reqs, bucket=8)         # 3 real rows + 5 pad rows
+    plain = [CimRequest(rid=i, inputs=make_input(MLP, i)) for i in range(3)]
+    svc.serve(plain)
+    for a, b in zip(reqs, plain):
+        for t in MLP.outputs:
+            np.testing.assert_array_equal(a.outputs[t], b.outputs[t])
+
+
+# ------------------------------------------------------- compile-cache cap
+
+def test_compile_cache_lru_eviction(tmp_path):
+    from repro.core import compiler
+    from repro.dse import CompileCache
+
+    probe = CompileCache(tmp_path)           # measure one entry's size
+    g = MLP
+    archs = [CHIP8.replace(act_bits=b) for b in (2, 3, 4, 5)]
+    keys = []
+    for arch in archs:
+        res = compiler.compile_graph(g, arch)
+        keys.append(compiler.compile_key(g, arch))
+        probe.put(keys[-1], res)
+    entry_bytes = probe.disk_bytes() // len(archs)
+    probe.clear()
+
+    cache = CompileCache(tmp_path, max_bytes=int(entry_bytes * 2.5))
+    results = [compiler.compile_graph(g, a) for a in archs]
+    for key, res in zip(keys[:3], results[:3]):
+        cache.put(key, res)
+    # oldest of the three must have been evicted to fit the ~2.5-entry cap
+    assert cache.stats()["disk_entries"] == 2
+    assert cache.evictions == 1
+    assert not cache.contains(keys[0])
+    assert cache.get(keys[0]) is None        # counts a miss, not a crash
+    assert cache.contains(keys[2])           # newest always survives
+
+    # touch entry 1 (LRU refresh), then insert entry 3: entry 2 evicts
+    os.utime(cache._pkl(keys[1]), (9e9, 9e9))
+    os.utime(cache._json(keys[1]), (9e9, 9e9))
+    cache.put(keys[3], results[3])
+    assert cache.contains(keys[1])           # recently accessed: kept
+    assert not cache.contains(keys[2])
+    assert cache.contains(keys[3])
+    assert cache.disk_bytes() <= int(entry_bytes * 2.5)
+
+    # uncapped handle on the same dir never evicts
+    free = CompileCache(tmp_path)
+    free.put(keys[0], results[0])
+    assert free.evictions == 0
+    assert "evictions" in free.stats()
+
+
+def test_compile_cache_memory_hits_protect_entries_from_eviction(tmp_path):
+    # memory-layer hits never touch the files; the in-process access log
+    # must still count them as recency or the hottest entry evicts first
+    from repro.core import compiler
+    from repro.dse import CompileCache
+
+    g = MLP
+    archs = [CHIP8.replace(act_bits=b) for b in (2, 3, 4)]
+    results = [compiler.compile_graph(g, a) for a in archs]
+    keys = [compiler.compile_key(g, a) for a in archs]
+    probe = CompileCache(tmp_path)
+    probe.put(keys[0], results[0])
+    entry = probe.disk_bytes()
+    probe.clear()
+
+    cache = CompileCache(tmp_path, max_bytes=int(entry * 2.5))
+    cache.put(keys[0], results[0])
+    cache.put(keys[1], results[1])
+    # age both entries on disk, then hit entry 0 through the memory layer
+    for k in keys[:2]:
+        os.utime(cache._pkl(k), (1, 1))
+        os.utime(cache._json(k), (1, 1))
+    assert cache.get(keys[0]) is not None        # memory hit, no file I/O
+    cache.put(keys[2], results[2])               # forces one eviction
+    assert cache.contains(keys[0])               # hot entry survives
+    assert not cache.contains(keys[1])           # cold one evicted
+    assert cache.get(keys[1]) is None            # memory layer purged too
+
+
+# ------------------------------------------------------- campaign handoff
+
+def test_points_from_campaign_duck_typed():
+    from repro.serving import points_from_campaign
+
+    class _Best:
+        def __init__(self):
+            from repro.dse import DesignPoint
+            self.point = DesignPoint(level="WLM", binding="B->XBC",
+                                     use_pipeline=True, use_duplication=True)
+
+    class _Outcome:
+        best = _Best()
+
+    class _Campaign:
+        workloads = {"cnn": _Outcome()}
+
+    pts = points_from_campaign(_Campaign())
+    assert set(pts) == {"cnn"}
+    assert pts["cnn"]["use_pipeline"] is True
+    # tenants without a feasible best are skipped
+    class _NoBest:
+        best = None
+    _Campaign.workloads["mlp"] = _NoBest()
+    assert set(points_from_campaign(_Campaign())) == {"cnn"}
