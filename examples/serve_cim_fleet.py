@@ -68,7 +68,7 @@ def main():
             for t in graph.outputs:
                 np.testing.assert_array_equal(a.outputs[t], b.outputs[t])
         print(f"{model}: {len(mine)} fleet outputs bit-exact vs standalone "
-              f"CimBatchService on the full chip")
+              "CimBatchService on the full chip")
     print("\nco-tenancy changed scheduling, not semantics ✓")
 
 

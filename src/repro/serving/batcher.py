@@ -20,6 +20,10 @@ cached executables instead of paying a fresh trace each.
 
 The batcher is clock-agnostic: every decision takes an explicit ``now``
 so fleets can run on wall time while tests drive a synthetic clock.
+All times (``now``, ``max_wait_s``, ``est_batch_s``, deadlines) are
+**seconds on that one caller-chosen clock** — never compiler cycles.
+Thread-safety: plain mutable queue state, not locked; one batcher is
+owned by one fleet thread.
 """
 from __future__ import annotations
 

@@ -13,6 +13,13 @@ batch server and the multi-tenant fleet); ``serve_padded`` is the
 fleet batcher's entry point — it pads a partial batch up to a bucket
 size so the bucket's already-traced executable is reused instead of
 tracing a new batch shape per ragged queue drain.
+
+Units and clocks: ``dispatch``/``serve_padded`` return **wall-clock
+seconds** (``time.time()`` around the device call); the compiled plan's
+latency/energy estimates are **compiler cycles/pJ** and never mix into
+serve times.  Thread-safety: the jitted executable is safe to share,
+but ``stats`` and the warm-shape set are plain mutable state — one
+service instance per serving thread.
 """
 from __future__ import annotations
 

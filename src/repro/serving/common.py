@@ -8,8 +8,9 @@ bookkeeping cannot drift between them:
   * ``BaseRequest`` — identity + timing fields every service shares;
   * ``CimRequest`` — one CIM inference (unbatched graph inputs/outputs);
   * ``LmRequest``  — one LM generation (prompt -> token list);
-  * ``ServiceStats`` — per-service counters with p50/p95 tail latency
-    over the recorded per-request latencies.
+  * ``ServiceStats`` — per-service accounting with an explicit
+    cumulative/windowed split: all-time counters next to windowed
+    p50/p95 tail latency over recent requests.
 
 Timing model: ``arrival_s`` / ``deadline_s`` live on one caller-chosen
 clock (wall time by default; tests may inject a synthetic ``now``).
@@ -90,46 +91,83 @@ LATENCY_WINDOW = 4096
 class ServiceStats:
     """Throughput counters + tail-latency accounting for one service.
 
-    ``latencies_s`` is a sliding window of the most recent
-    ``LATENCY_WINDOW`` per-request latencies — p50/p95 describe recent
-    traffic; the counters (``requests``/``batches``/...) remain
-    all-time totals.
+    The bundle holds two kinds of state, and the split is part of the
+    contract:
+
+      * **cumulative** (all-time, monotone): ``requests``, ``batches``,
+        ``serve_s`` and ``deadline_misses`` count everything the service
+        ever did — dashboards diff them across scrapes;
+      * **windowed** (recent, bounded): ``window_latencies_s`` and
+        ``window_missed`` retain only the most recent ``LATENCY_WINDOW``
+        requests, so ``p50_latency_s`` / ``p95_latency_s`` /
+        ``window_deadline_misses`` describe *current* traffic and a
+        long-running fleet stays O(1) in memory.
+
+    Units and clocks: latencies and ``serve_s`` are **seconds on the
+    service clock** the caller drives (wall time by default, synthetic
+    in tests/benchmarks) — never compiler cycles.  Thread-safety: plain
+    mutable state owned by one service on one thread; ``merge`` returns
+    a new bundle and mutates neither operand.
     """
 
-    requests: int = 0
-    batches: int = 0
-    serve_s: float = 0.0                 # busy time (batch execution)
-    deadline_misses: int = 0
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    requests: int = 0                    # cumulative served requests
+    batches: int = 0                     # cumulative dispatched batches
+    serve_s: float = 0.0                 # cumulative busy seconds
+    deadline_misses: int = 0             # cumulative missed deadlines
+    #: sliding window of recent per-request latencies (seconds)
+    window_latencies_s: List[float] = dataclasses.field(default_factory=list)
+    #: parallel window: True where that request missed its deadline
+    window_missed: List[bool] = dataclasses.field(default_factory=list)
 
     def record(self, latencies_s: List[float], batch_s: float,
-               misses: int = 0) -> None:
-        """Account one served batch: per-request latencies + wall time."""
+               misses: int = 0,
+               missed: Optional[List[bool]] = None) -> None:
+        """Account one served batch: per-request latencies (seconds) +
+        batch busy seconds.  ``missed`` optionally flags which of the
+        batch's requests missed their deadline (defaults to the first
+        ``misses`` positions, which preserves the windowed count)."""
         self.requests += len(latencies_s)
         self.batches += 1
         self.serve_s += batch_s
         self.deadline_misses += misses
-        self.latencies_s.extend(latencies_s)
-        del self.latencies_s[:-LATENCY_WINDOW]
+        if missed is None:
+            missed = [i < misses for i in range(len(latencies_s))]
+        self.window_latencies_s.extend(latencies_s)
+        self.window_missed.extend(missed)
+        del self.window_latencies_s[:-LATENCY_WINDOW]
+        del self.window_missed[:-LATENCY_WINDOW]
 
     @property
     def requests_per_s(self) -> float:
+        """Cumulative throughput: all-time requests over busy seconds."""
         return self.requests / self.serve_s if self.serve_s > 0 else 0.0
 
     @property
     def p50_latency_s(self) -> float:
-        return percentile(self.latencies_s, 50.0)
+        """Median latency over the recent window (seconds)."""
+        return percentile(self.window_latencies_s, 50.0)
 
     @property
     def p95_latency_s(self) -> float:
-        return percentile(self.latencies_s, 95.0)
+        """Tail latency over the recent window (seconds)."""
+        return percentile(self.window_latencies_s, 95.0)
+
+    @property
+    def window_deadline_misses(self) -> int:
+        """Missed deadlines among the window's requests (recent, not
+        all-time — compare with cumulative ``deadline_misses``)."""
+        return sum(self.window_missed)
 
     def merge(self, other: "ServiceStats") -> "ServiceStats":
-        """Combine two stats bundles (fleet aggregate view)."""
+        """Combine two bundles (fleet aggregate view): cumulative
+        counters add; the merged window keeps the most recent
+        ``LATENCY_WINDOW`` entries of the concatenation."""
         return ServiceStats(
             requests=self.requests + other.requests,
             batches=self.batches + other.batches,
             serve_s=self.serve_s + other.serve_s,
             deadline_misses=self.deadline_misses + other.deadline_misses,
-            latencies_s=(self.latencies_s
-                         + other.latencies_s)[-LATENCY_WINDOW:])
+            window_latencies_s=(self.window_latencies_s
+                                + other.window_latencies_s)[-LATENCY_WINDOW:],
+            window_missed=(self.window_missed
+                           + other.window_missed)[-LATENCY_WINDOW:])

@@ -19,6 +19,14 @@ view (its crossbar partition) and trace-lowered to a jitted executable:
 Engines pre-trace their bucket shapes on demand (first dispatch per
 bucket runs once untimed inside ``CimBatchService.dispatch``), so
 steady-state fleet latencies never include jit tracing.
+
+Units and clocks: engine serve times are **wall-clock seconds** (what
+``CimBatchService.serve_padded`` measures around the executable);
+compile-side costs (weight-write, schedule latency) are **compiler
+cycles** and appear only in plan/compile metadata, never in serve
+times.  Thread-safety: a pool is built once and then read-only;
+individual engines carry mutable ``ServiceStats`` and are not
+thread-safe — one fleet (thread) per pool.
 """
 from __future__ import annotations
 
@@ -47,7 +55,13 @@ def points_from_campaign(campaign_result) -> Dict[str, Dict]:
 
 
 class EnginePool:
-    """One warm engine per tenant of a ``TenancyPlan``."""
+    """One warm engine per tenant of a ``TenancyPlan``.
+
+    Engines are keyed by tenant name; each serves on its tenant's
+    crossbar partition (``plan.subarch(name)``).  Built eagerly in the
+    constructor (compiles may hit ``cache``); afterwards the mapping is
+    read-only.  Per-engine ``stats`` are mutable and single-threaded.
+    """
 
     def __init__(self, plan: TenancyPlan, *, cache=None, seed: int = 0,
                  max_batch: int = 8, use_executor: bool = True,

@@ -1,10 +1,11 @@
-"""Multi-tenant CIM serving fleet: router + batchers + engine pool.
+"""CIM serving fleet: single-chip router plus the cross-chip cluster.
 
-``CimFleet`` is the frontend that turns the compiler stack into a
-serving system: N workloads co-resident on one chip, each owning the
+Two tiers live here:
+
+``CimFleet`` — N workloads co-resident on *one* chip, each owning the
 crossbar partition the tenancy planner assigned it, fronted by a
 deadline-aware dynamic batcher and served by a warm trace-lowered
-executable.
+executable:
 
     fleet = CimFleet([TenantSpec("resnet", g1, traffic=3.0),
                       TenantSpec("vit", g2, traffic=1.0)], arch)
@@ -12,21 +13,36 @@ executable.
     done = fleet.drain()                      # flush queues, fill outputs
     print(fleet.stats().summary())
 
+``CimCluster`` — the fleet tier over *N chips* (per-chip arch may
+differ): a 2-D ``FleetPlan`` (tenant -> chip -> crossbar pool) routes
+each tenant's traffic across its chip replicas; observed per-tenant
+traffic is tracked with an EWMA and, when it drifts from the plan's
+assumed shares, the cluster re-plans online and migrates tenants over
+the weight-rewrite path; admission control sheds lowest-priority
+tenants to time-multiplexed residency before rejecting (typed
+``AdmissionError``) under overload.
+
 Request lifecycle: ``submit`` stamps the arrival time and routes by
 model id; ``step`` dispatches every tenant queue whose release policy
 fires (full bucket / age / deadline pressure); ``drain`` flushes
 everything.  Per-request ``latency_s`` is queue wait plus batch
-execution; per-tenant ``ServiceStats`` (p50/p95 tails, deadline misses)
-aggregate into ``FleetStats``.
+execution; per-tenant ``ServiceStats`` aggregate into ``FleetStats``.
 
-The fleet is clock-agnostic like the batcher: pass explicit ``now``
-values for simulated traffic, or let it use wall time.
+Units and clocks: all public ``*_s`` values are **seconds** on one
+caller-chosen service clock — wall time by default (``time.monotonic``),
+synthetic when every call passes explicit ``now`` values (tests and
+benchmarks do).  Engine dispatch durations are measured wall-clock
+seconds placed on that same timeline; crossbar weight-rewrite costs are
+**compiler cycles** and only ever appear in trace/plan metadata, never
+on the clock.  Thread-safety: neither class is thread-safe — one fleet
+or cluster is driven from one thread; batchers and stats are plain
+mutable state.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -34,23 +50,41 @@ from ..core.abstraction import CIMArch
 from .batcher import DEFAULT_BUCKETS, DynamicBatcher
 from .common import CimRequest, ServiceStats
 from .engine import EnginePool
-from .placement import TenancyPlan, TenantSpec, plan_tenancy
+from .placement import (FleetPlan, TenancyPlan, TenantSpec, plan_fleet,
+                        plan_tenancy)
+from .trace import TraceRecorder
+
+
+class AdmissionError(RuntimeError):
+    """Typed rejection: the cluster is saturated for this tenant and the
+    degradation ladder is exhausted (every lower-priority tenant is
+    already time-multiplexed).  Carries ``model``, ``pending`` and
+    ``limit`` so callers can back off or shed load upstream."""
+
+    def __init__(self, model: str, pending: int, limit: int):
+        self.model, self.pending, self.limit = model, pending, limit
+        super().__init__(
+            f"tenant {model!r} rejected: {pending} pending >= "
+            f"limit {limit} and no lower-priority tenant left to shed")
 
 
 @dataclasses.dataclass
 class FleetStats:
-    """Per-tenant stats plus the fleet-wide aggregate."""
+    """Per-tenant stats plus the fleet-wide aggregate (see
+    ``ServiceStats`` for the cumulative-vs-windowed field split)."""
 
     tenants: Dict[str, ServiceStats]
 
     @property
     def aggregate(self) -> ServiceStats:
+        """All tenants merged into one ``ServiceStats``."""
         total = ServiceStats()
         for s in self.tenants.values():
             total = total.merge(s)
         return total
 
     def summary(self) -> str:
+        """Human-readable one-screen digest (latencies in ms)."""
         agg = self.aggregate
         lines = [f"fleet: {agg.requests} requests in {agg.batches} batches; "
                  f"p50 {agg.p50_latency_s * 1e3:.2f}ms / "
@@ -64,7 +98,13 @@ class FleetStats:
 
 
 class CimFleet:
-    """Serve N workloads on one CIM chip behind one frontend."""
+    """Serve N workloads on one CIM chip behind one frontend.
+
+    Clock: every public method takes an optional ``now`` (service-clock
+    seconds); omitted, it falls back to ``time.monotonic()``.  Pass a
+    ``TraceRecorder`` (plus ``chip`` label) to emit batcher queue-wait
+    and engine dispatch spans onto its timeline.  Not thread-safe.
+    """
 
     def __init__(self, tenants: Sequence[TenantSpec], arch: CIMArch, *,
                  plan: Optional[TenancyPlan] = None,
@@ -72,7 +112,9 @@ class CimFleet:
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_wait_s: float = 0.002,
                  use_executor: bool = True,
-                 points: Optional[Dict[str, Dict]] = None):
+                 points: Optional[Dict[str, Dict]] = None,
+                 trace: Optional[TraceRecorder] = None,
+                 chip: Optional[str] = None):
         if plan is None:
             plan = plan_tenancy(tenants, arch)
         else:
@@ -103,6 +145,8 @@ class CimFleet:
                         "one passed to the fleet")
         self.plan = plan
         self.plan.validate()
+        self.trace = trace
+        self.chip = chip or arch.name
         self.pool = EnginePool(self.plan, cache=cache, seed=seed,
                                max_batch=max(buckets),
                                use_executor=use_executor, points=points)
@@ -123,7 +167,10 @@ class CimFleet:
     def submit(self, model: str, inputs: Dict[str, np.ndarray], *,
                deadline_s: Optional[float] = None,
                now: Optional[float] = None) -> CimRequest:
-        """Admit one request for ``model``; returns the queued request."""
+        """Admit one request for ``model``; returns the queued request.
+
+        ``now``/``deadline_s`` are service-clock seconds; arrival is
+        stamped here."""
         if model not in self.pool:
             raise KeyError(f"unknown model {model!r}; "
                            f"tenants: {self.pool.names}")
@@ -136,7 +183,8 @@ class CimFleet:
 
     def submit_request(self, req: CimRequest,
                        now: Optional[float] = None) -> CimRequest:
-        """Admit a pre-built request (its ``model`` field routes it)."""
+        """Admit a pre-built request (its ``model`` field routes it);
+        re-stamps ``arrival_s`` to ``now`` (service clock)."""
         if req.model not in self.pool:
             raise KeyError(f"unknown model {req.model!r}; "
                            f"tenants: {self.pool.names}")
@@ -144,9 +192,32 @@ class CimFleet:
         self._batchers[req.model].submit(req)
         return req
 
+    def requeue(self, req: CimRequest) -> None:
+        """Admit a carried-over request *preserving* its ``arrival_s``
+        (cluster migration uses this so queue-wait accounting survives a
+        re-plan)."""
+        if req.model not in self.pool:
+            raise KeyError(f"unknown model {req.model!r}; "
+                           f"tenants: {self.pool.names}")
+        self._batchers[req.model].submit(req)
+
     @property
     def pending(self) -> int:
+        """Queued (not yet dispatched) requests across all tenants."""
         return sum(len(b) for b in self._batchers.values())
+
+    def queue_depth(self, model: str) -> int:
+        """Queued requests for one tenant (admission control input)."""
+        return len(self._batchers[model])
+
+    def evict_pending(self) -> List[CimRequest]:
+        """Remove and return every queued request (cluster migration:
+        the new plan's fleets re-admit them; nothing is dropped)."""
+        out: List[CimRequest] = []
+        for b in self._batchers.values():
+            out.extend(b.queue)
+            b.queue = []
+        return out
 
     # -- dispatch --------------------------------------------------------
     def step(self, now: Optional[float] = None,
@@ -192,18 +263,488 @@ class CimFleet:
         # steady-state estimate feeding the deadline-pressure policy
         prev = self._observed_s.get(name)
         self._observed_s[name] = dt if prev is None else 0.5 * (prev + dt)
-        latencies, misses = [], 0
+        latencies, missed = [], []
         for r in batch.requests:
             r.latency_s = (now - r.arrival_s) + dt
             latencies.append(r.latency_s)
-            misses += r.missed_deadline(now + dt)
-        engine.stats.record(latencies, dt, misses)
+            missed.append(r.missed_deadline(now + dt))
+        misses = sum(missed)
+        engine.stats.record(latencies, dt, misses, missed=missed)
+        if self.trace is not None:
+            oldest = min(r.arrival_s for r in batch.requests)
+            self.trace.complete(
+                self.chip, name, f"queue n={len(batch.requests)}",
+                "batcher", oldest, now - oldest,
+                reason=batch.reason, bucket=batch.bucket)
+            self.trace.complete(
+                self.chip, name, f"dispatch b={batch.bucket}", "engine",
+                now, dt, n=len(batch.requests), misses=misses)
         return batch.requests
 
     # -- introspection ---------------------------------------------------
     def stats(self) -> FleetStats:
+        """Per-tenant ``ServiceStats`` for this chip."""
         return FleetStats(tenants={name: self.pool[name].stats
                                    for name in self.pool.names})
 
+    def serve_s(self) -> float:
+        """Cumulative engine busy seconds on this chip (wall-clock)."""
+        return sum(self.pool[name].stats.serve_s
+                   for name in self.pool.names)
+
     def summary(self) -> str:
+        """Plan + stats digest for this chip."""
         return self.plan.summary() + "\n" + self.stats().summary()
+
+
+# ---------------------------------------------------------------------------
+# Cross-chip cluster: routing, traffic drift, live re-planning.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReplanPolicy:
+    """When the cluster re-plans (all times service-clock seconds).
+
+    Observed per-tenant rates are EWMA-smoothed per ``control`` window
+    (``ewma_alpha`` weights the newest window).  A re-plan triggers when
+    the worst per-tenant relative divergence between observed and
+    planned traffic *shares* exceeds ``drift_threshold`` and at least
+    ``min_requests`` arrivals were seen since the last re-plan (noise
+    guard).
+    """
+
+    ewma_alpha: float = 0.5
+    drift_threshold: float = 0.5
+    min_requests: int = 32
+    #: floor share for divergence normalization (avoids exploding
+    #: ratios for near-zero planned shares)
+    share_floor: float = 0.02
+    #: absolute share gap below which a tenant contributes no drift —
+    #: without it, tiny-share tenants keep large *relative* divergence
+    #: after a re-plan and the cluster thrashes (migrates every window)
+    min_share_delta: float = 0.1
+
+
+class _TrafficEwma:
+    """Per-tenant arrival-rate EWMA over ``control`` windows.  Rates are
+    requests/second on the service clock; not thread-safe."""
+
+    def __init__(self, alpha: float):
+        self.alpha = alpha
+        self.rates: Dict[str, float] = {}
+        self.counts: Dict[str, int] = {}
+        self.window_total = 0
+        self._last: Optional[float] = None
+
+    def arrival(self, model: str, now: float) -> None:
+        if self._last is None:
+            self._last = now
+        self.counts[model] = self.counts.get(model, 0) + 1
+        self.window_total += 1
+
+    def roll(self, now: float) -> float:
+        """Fold the window ending at ``now`` into the EWMA; returns the
+        window length in seconds (0 when no arrivals were ever seen)."""
+        if self._last is None:
+            return 0.0
+        window = max(now - self._last, 1e-9)
+        names = set(self.rates) | set(self.counts)
+        for n in names:
+            obs = self.counts.get(n, 0) / window
+            prev = self.rates.get(n)
+            self.rates[n] = obs if prev is None \
+                else self.alpha * obs + (1 - self.alpha) * prev
+        self.counts = {}
+        self._last = now
+        return window
+
+    def shares(self) -> Dict[str, float]:
+        total = sum(self.rates.values())
+        if total <= 0:
+            return {}
+        return {k: v / total for k, v in self.rates.items()}
+
+
+class CimCluster:
+    """N-chip CIM serving cluster: 2-D placement, drift-driven live
+    re-planning, admission control and Chrome-trace observability.
+
+    One ``CimFleet`` per planned chip serves that chip's tenant subset;
+    the cluster routes each tenant's traffic across its chip replicas
+    in the ``FleetPlan``'s proportions (deterministic weighted
+    round-robin).  ``control`` is the operator heartbeat: it rolls the
+    traffic EWMA, samples per-chip utilization/queue counters into the
+    trace, and re-plans + migrates when observed shares drift from the
+    plan's assumptions.  Migration reuses the weight-rewrite path: the
+    affected chips' engines are rebuilt against the new partitions
+    (compiles warm-load from ``cache``), queued requests carry over,
+    and the rewrite cost (crossbars x ``t_write_xb`` cycles) is
+    recorded in the trace.
+
+    Clock: explicit ``now`` (service-clock seconds) everywhere, wall
+    time by default — same contract as ``CimFleet``.  Not thread-safe:
+    drive one cluster from one thread.
+    """
+
+    def __init__(self, tenants: Sequence[TenantSpec],
+                 chips: Mapping[str, CIMArch], *,
+                 plan: Optional[FleetPlan] = None,
+                 cache=None, seed: int = 0,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_wait_s: float = 0.002,
+                 use_executor: bool = True,
+                 points: Optional[Dict[str, Dict]] = None,
+                 trace: Optional[TraceRecorder] = None,
+                 max_queue: int = 256,
+                 policy: Optional[ReplanPolicy] = None):
+        self.specs = {t.name: t for t in tenants}
+        if len(self.specs) != len(list(tenants)):
+            raise ValueError("tenant names must be unique")
+        self.archs = dict(chips)
+        if plan is None:
+            plan = plan_fleet(tenants, self.archs)
+        if set(plan.routes) != set(self.specs):
+            raise ValueError(
+                f"plan tenants {sorted(plan.routes)} != specs "
+                f"{sorted(self.specs)}")
+        self.cache = cache
+        self.seed = seed
+        self.buckets = tuple(buckets)
+        self.max_wait_s = max_wait_s
+        self.use_executor = use_executor
+        self.points = points
+        self.trace = trace
+        self.max_queue = max_queue
+        self.policy = policy or ReplanPolicy()
+        self.traffic = _TrafficEwma(self.policy.ewma_alpha)
+        # operator counters (cumulative)
+        self.migrations = 0              # applied re-plans
+        self.demotions = 0               # tenants shed to time-multiplexed
+        self.rejected = 0                # AdmissionError count
+        self.demoted: set = set()        # currently-shed tenant names
+        self._arrivals_since_replan = 0
+        self._rid = 0
+        self._retired: Dict[str, ServiceStats] = {}
+        self._chip_busy_base: Dict[str, float] = {}
+        self._credits: Dict[str, Dict[str, float]] = {}
+        self.fleets: Dict[str, CimFleet] = {}
+        self.plan = None
+        self._install_plan(plan)
+
+    # -- plan installation / migration -----------------------------------
+    def _build_chip(self, chip: str, tplan: TenancyPlan) -> CimFleet:
+        specs = [p.spec for p in tplan.tenants.values()]
+        return CimFleet(specs, self.archs[chip], plan=tplan,
+                        cache=self.cache, seed=self.seed,
+                        buckets=self.buckets, max_wait_s=self.max_wait_s,
+                        use_executor=self.use_executor, points=self.points,
+                        trace=self.trace, chip=chip)
+
+    def _install_plan(self, plan: FleetPlan,
+                      now: Optional[float] = None) -> None:
+        plan.validate()
+        old = self.plan
+        pending: List[CimRequest] = []
+        rebuilt = []
+        for chip, tplan in plan.chips.items():
+            prior = self.fleets.get(chip)
+            if prior is not None and old is not None \
+                    and chip in old.chips \
+                    and _same_chip_plan(old.chips[chip], tplan):
+                continue                       # placement unchanged: keep
+            if prior is not None:
+                pending.extend(prior.evict_pending())
+                self._retire(prior)
+                self._chip_busy_base[chip] = \
+                    self._chip_busy_base.get(chip, 0.0) + prior.serve_s()
+            rebuilt.append(chip)
+            self.fleets[chip] = self._build_chip(chip, tplan)
+        for chip in list(self.fleets):
+            if chip not in plan.chips:         # chip emptied by the plan
+                prior = self.fleets.pop(chip)
+                pending.extend(prior.evict_pending())
+                self._retire(prior)
+                self._chip_busy_base[chip] = \
+                    self._chip_busy_base.get(chip, 0.0) + prior.serve_s()
+        self.plan = plan
+        self._credits = {t: {c: 0.0 for c in plan.routes[t]}
+                         for t in plan.routes}
+        if self.trace is not None and now is not None:
+            for chip in rebuilt:
+                cost = _rewrite_cost(old, plan, chip)
+                self.trace.instant(
+                    chip, "migrate", "rewrite", now,
+                    rewritten_xbs=cost["xbs"],
+                    rewrite_cycles=cost["cycles"])
+        for req in pending:                    # carried over, never dropped
+            self._route(req)
+
+    def _retire(self, fleet: CimFleet) -> None:
+        for name, s in fleet.stats().tenants.items():
+            prev = self._retired.get(name, ServiceStats())
+            self._retired[name] = prev.merge(s)
+
+    # -- admission + routing ---------------------------------------------
+    @property
+    def names(self) -> List[str]:
+        """All tenant names (sorted)."""
+        return sorted(self.specs)
+
+    @property
+    def pending(self) -> int:
+        """Queued requests across every chip."""
+        return sum(f.pending for f in self.fleets.values())
+
+    def queue_depth(self, model: str) -> int:
+        """Queued requests for one tenant across its chips."""
+        return sum(f.queue_depth(model) for f in self.fleets.values()
+                   if model in f.pool)
+
+    def _admit(self, model: str, now: float) -> None:
+        """Admission control: at ``max_queue`` pending, first climb the
+        degradation ladder; rejection raises ``AdmissionError``."""
+        if self.queue_depth(model) >= self.max_queue:
+            if not self._degrade(model, now):
+                self.rejected += 1
+                if self.trace is not None:
+                    chip = next(iter(self.plan.routes[model]))
+                    self.trace.instant(chip, f"reject:{model}",
+                                       "admission", now,
+                                       pending=self.queue_depth(model),
+                                       limit=self.max_queue)
+                raise AdmissionError(model, self.queue_depth(model),
+                                     self.max_queue)
+
+    def submit(self, model: str, inputs: Dict[str, np.ndarray], *,
+               deadline_s: Optional[float] = None,
+               now: Optional[float] = None) -> CimRequest:
+        """Admit one request: admission control, then weighted routing.
+
+        Raises ``AdmissionError`` when the tenant's cluster-wide queue
+        is at ``max_queue`` and the degradation ladder is exhausted;
+        otherwise the first overload demotes the lowest-priority
+        still-resident tenant to time-multiplexed residency (re-plan +
+        migration) and the request is accepted.
+        """
+        req = CimRequest(rid=self._rid, inputs=inputs, model=model,
+                         deadline_s=deadline_s)
+        self._rid += 1
+        return self.submit_request(req, now=now)
+
+    def submit_request(self, req: CimRequest,
+                       now: Optional[float] = None) -> CimRequest:
+        """Admit a pre-built request (same admission path as
+        ``submit``; ``arrival_s`` is re-stamped to ``now``).  The
+        *same* object is queued, so the caller sees ``outputs`` and
+        ``latency_s`` once it completes."""
+        if req.model not in self.specs:
+            raise KeyError(f"unknown model {req.model!r}; tenants: "
+                           f"{self.names}")
+        now = time.monotonic() if now is None else now
+        self._admit(req.model, now)
+        req.arrival_s = now
+        self.traffic.arrival(req.model, now)
+        self._arrivals_since_replan += 1
+        self._route(req)
+        return req
+
+    def _route(self, req: CimRequest) -> None:
+        """Deterministic weighted round-robin over the tenant's chips
+        (Bresenham credits follow the plan's route proportions)."""
+        row = self.plan.routes[req.model]
+        credits = self._credits[req.model]
+        for chip, w in row.items():
+            credits[chip] = credits.get(chip, 0.0) + w
+        chip = max(sorted(credits), key=lambda c: credits[c])
+        credits[chip] -= 1.0
+        self.fleets[chip].requeue(req)
+
+    # -- degradation ladder ----------------------------------------------
+    def _degrade(self, model: str, now: float) -> bool:
+        """Shed the lowest-priority still-resident tenant (strictly
+        below ``model``'s priority) to time-multiplexed residency.
+        Returns True when a demotion was applied."""
+        mine = self.specs[model].priority
+        candidates = sorted(
+            (s for s in self.specs.values()
+             if s.name != model and s.name not in self.demoted
+             and s.priority < mine
+             and self.plan.total_replicas(s.name) > 0),
+            key=lambda s: (s.priority, s.name))
+        if not candidates:
+            return False
+        victim = candidates[0]
+        self.demoted.add(victim.name)
+        self.demotions += 1
+        if self.trace is not None:
+            chip = next(iter(self.plan.routes[victim.name]))
+            self.trace.instant(chip, f"demote:{victim.name}",
+                               "admission", now, for_tenant=model)
+        self._replan(now, reason="degrade")
+        return True
+
+    # -- dispatch --------------------------------------------------------
+    def step(self, now: Optional[float] = None,
+             force: bool = False) -> List[CimRequest]:
+        """One dispatch pass over every chip (see ``CimFleet.step``)."""
+        now = time.monotonic() if now is None else now
+        done: List[CimRequest] = []
+        for chip in sorted(self.fleets):
+            done.extend(self.fleets[chip].step(now, force=force))
+        return done
+
+    def drain(self, now: Optional[float] = None) -> List[CimRequest]:
+        """Flush every chip's queues to empty."""
+        now = time.monotonic() if now is None else now
+        done: List[CimRequest] = []
+        for chip in sorted(self.fleets):
+            done.extend(self.fleets[chip].drain(now))
+        return done
+
+    def serve(self, requests: Iterable[CimRequest],
+              now: Optional[float] = None) -> List[CimRequest]:
+        """Admit every request (admission control applies!), then
+        drain.  Raises ``AdmissionError`` like ``submit``."""
+        for r in requests:
+            self.submit_request(r, now=now)
+        return self.drain(now=now)
+
+    # -- control loop -----------------------------------------------------
+    def control(self, now: Optional[float] = None) -> dict:
+        """The operator heartbeat: roll traffic EWMA, sample
+        utilization/queue counters into the trace, re-plan on drift.
+
+        Returns ``{"drift": float, "replanned": bool, "shares":
+        {...}}`` for operator introspection.  Call it periodically
+        (every batching window or few) on the same clock as ``submit``.
+        """
+        now = time.monotonic() if now is None else now
+        window = self.traffic.roll(now)
+        if self.trace is not None and window > 0:
+            for chip in sorted(self.fleets):
+                fleet = self.fleets[chip]
+                busy = fleet.serve_s()
+                prev = getattr(fleet, "_last_busy_s", 0.0)
+                fleet._last_busy_s = busy
+                self.trace.counter(
+                    chip, "chip", now,
+                    {"utilization": min(1.0, (busy - prev) / window),
+                     "queue_depth": fleet.pending})
+        observed = self.traffic.shares()
+        drift = self._drift(observed)
+        replanned = False
+        if (drift > self.policy.drift_threshold
+                and self._arrivals_since_replan
+                >= self.policy.min_requests):
+            if self.trace is not None:
+                chip = sorted(self.fleets)[0]
+                self.trace.instant(chip, "replan", "rewrite", now,
+                                   drift=round(drift, 4))
+            self._replan(now, reason="drift")
+            replanned = True
+        return {"drift": drift, "replanned": replanned,
+                "shares": observed}
+
+    def _drift(self, observed: Dict[str, float]) -> float:
+        """Worst per-tenant relative divergence of observed vs planned
+        traffic shares (0 when no traffic has been observed).  Tenants
+        whose *absolute* share gap is under ``policy.min_share_delta``
+        contribute nothing — small-share noise must not look like a
+        large relative drift."""
+        if not observed:
+            return 0.0
+        assumed = self.plan.assumed_shares
+        floor = self.policy.share_floor
+        worst = 0.0
+        for name in self.specs:
+            a = max(assumed.get(name, 0.0), floor)
+            o = observed.get(name, 0.0)
+            if abs(o - a) < self.policy.min_share_delta:
+                continue
+            worst = max(worst, abs(o - a) / a)
+        return worst
+
+    def _replan(self, now: float, reason: str) -> None:
+        """Re-plan from current EWMA rates and migrate.  Tenants with
+        no observed traffic get a floor share (``policy.share_floor``
+        of the observed total) — observed rates are requests/second,
+        so mixing in the spec's unit-less assumed traffic would skew
+        the split."""
+        rates = self.traffic.rates
+        total = sum(rates.values())
+        floor = max(total, 1.0) * self.policy.share_floor
+        specs = [dataclasses.replace(spec,
+                                     traffic=max(rates.get(name, 0.0),
+                                                 floor))
+                 for name, spec in sorted(self.specs.items())]
+        new_plan = plan_fleet(specs, self.archs,
+                              force_multiplexed=self.demoted)
+        self._install_plan(new_plan, now=now)
+        self.migrations += 1
+        self._arrivals_since_replan = 0
+
+    # -- introspection ----------------------------------------------------
+    def stats(self) -> FleetStats:
+        """Per-tenant stats merged across chips *and* across any
+        engines retired by migration (counters are cumulative over the
+        cluster's whole life)."""
+        merged: Dict[str, ServiceStats] = {
+            n: s for n, s in self._retired.items()}
+        for fleet in self.fleets.values():
+            for name, s in fleet.stats().tenants.items():
+                prev = merged.get(name, ServiceStats())
+                merged[name] = prev.merge(s)
+        return FleetStats(tenants=merged)
+
+    def chip_busy_s(self) -> Dict[str, float]:
+        """Cumulative engine busy seconds per chip (wall-clock),
+        surviving migrations — the benchmark's parallel-chips clock
+        uses max-over-chips deltas of this."""
+        out = dict(self._chip_busy_base)
+        for chip, fleet in self.fleets.items():
+            out[chip] = out.get(chip, 0.0) + fleet.serve_s()
+        return out
+
+    def summary(self) -> str:
+        """Plan + stats + control-counter digest."""
+        extra = (f"cluster: {self.migrations} migrations, "
+                 f"{self.demotions} demotions, {self.rejected} rejected, "
+                 f"demoted={sorted(self.demoted)}")
+        return "\n".join([self.plan.summary(), self.stats().summary(),
+                          extra])
+
+
+def _same_chip_plan(a: TenancyPlan, b: TenancyPlan) -> bool:
+    """True when two intra-chip plans place the same tenants with the
+    same partitions (cores/replicas/residency) — i.e. no weight
+    movement is needed."""
+    if set(a.tenants) != set(b.tenants):
+        return False
+    return all(
+        (a.tenants[n].cores, a.tenants[n].replicas, a.tenants[n].resident)
+        == (b.tenants[n].cores, b.tenants[n].replicas,
+            b.tenants[n].resident)
+        for n in a.tenants)
+
+
+def _rewrite_cost(old: Optional[FleetPlan], new: FleetPlan,
+                  chip: str) -> Dict[str, float]:
+    """Crossbars (and cycles) that must be (re)programmed to realize
+    ``new`` on ``chip`` — every resident copy whose placement differs
+    from ``old`` (all of them on a fresh install).  Cycles use the
+    arch's ``t_write_xb`` (compiler cycles, not wall-clock)."""
+    tplan = new.chips[chip]
+    arch = tplan.arch
+    xbs = 0
+    for name, p in tplan.tenants.items():
+        if not p.resident:
+            continue
+        prior = None
+        if old is not None and chip in old.chips:
+            prior = old.chips[chip].tenants.get(name)
+        if prior is not None and prior.resident \
+                and (prior.replicas, prior.footprint_cores) \
+                == (p.replicas, p.footprint_cores):
+            continue                       # weights already in place
+        xbs += p.replicas * p.footprint_cores * arch.core.n_xbs
+    return {"xbs": xbs, "cycles": xbs * arch.t_write_xb()}

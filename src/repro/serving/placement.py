@@ -31,12 +31,24 @@ the same machinery the compiler uses inside one model:
   The result is a ``TenancyPlan`` whose per-tenant ``CIMArch`` views
   (``CIMArch.subarch``) provably sum to at most the chip's crossbar
   pool (``TenancyPlan.validate``, asserted in tests).
+
+Above the single chip sits the fleet dimension: ``plan_fleet`` assigns
+tenant -> chip -> crossbar pool over an N-chip fleet (per-chip arch may
+differ) by water-filling offered load across chip capacities — hot
+tenants split across chips (replicas span chips), cold tenants land
+whole on the least-loaded chip — then runs ``plan_tenancy`` per chip,
+so every intra-chip guarantee above holds per chip of the fleet.
+
+Units: footprints are **cores/crossbars**, service times are
+**compiler cycles** (not wall-clock), traffic is a caller-scaled
+relative rate.  Planning is deterministic and purely functional — no
+clock, no shared state — and therefore thread-safe.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence
+from typing import Collection, Dict, List, Mapping, Sequence
 
 from ..core.abstraction import CIMArch
 from ..core.cg_opt import CostModel, balance_duplication, \
@@ -56,6 +68,9 @@ class TenantSpec:
     #: use_pipeline / use_duplication), e.g. a DSE campaign best point's
     #: ``DesignPoint.compile_kwargs()``
     compile_kwargs: Dict = dataclasses.field(default_factory=dict)
+    #: degradation rank under overload: lower-priority tenants are shed
+    #: to time-multiplexed residency first (see ``CimCluster``)
+    priority: int = 0
 
     def __post_init__(self):
         if self.traffic <= 0:
@@ -168,12 +183,18 @@ def _traffic_weights(tenants: Sequence[TenantSpec],
 
 
 def plan_tenancy(tenants: Sequence[TenantSpec], arch: CIMArch, *,
-                 min_cores: int = 1) -> TenancyPlan:
+                 min_cores: int = 1,
+                 force_multiplexed: Collection[str] = ()) -> TenancyPlan:
     """Partition ``arch``'s crossbar pool across ``tenants``.
 
     Deterministic: ties in traffic resolve by input order.  Raises if
     the chip cannot give every tenant ``min_cores`` cores; any other
     overload degrades to time-multiplexing, never to rejection.
+
+    ``force_multiplexed`` names tenants demoted to time-multiplexed
+    residency regardless of fit — the cluster's graceful-degradation
+    ladder uses this to shed low-priority tenants' resident cores to
+    overloaded neighbours before rejecting traffic.
     """
     tenants = list(tenants)
     if not tenants:
@@ -187,6 +208,7 @@ def plan_tenancy(tenants: Sequence[TenantSpec], arch: CIMArch, *,
             f"chip has {budget} cores < {min_cores} x {len(tenants)} tenants")
 
     profiles = {t.name: _tenant_profile(t, arch) for t in tenants}
+    force_multiplexed = set(force_multiplexed)
 
     # -- residency: traffic-desc greedy with a reservation for the rest --
     order = sorted(range(len(tenants)),
@@ -198,7 +220,8 @@ def plan_tenancy(tenants: Sequence[TenantSpec], arch: CIMArch, *,
         spec = tenants[i]
         footprint = profiles[spec.name][0]
         reserve = min_cores * (len(order) - rank - 1)   # tenants after this
-        if footprint <= remaining - reserve:
+        if (spec.name not in force_multiplexed
+                and footprint <= remaining - reserve):
             resident.append(spec)
             remaining -= footprint
         else:
@@ -270,5 +293,258 @@ def plan_tenancy(tenants: Sequence[TenantSpec], arch: CIMArch, *,
             resident=spec.name in resident_names,
             footprint_cores=footprint, est_cycles_per_req=cycles)
     plan = TenancyPlan(arch=arch, tenants=placements)
+    plan.validate()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Fleet dimension: tenant -> chip -> crossbar pool.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetPlan:
+    """A 2-D tenancy plan: which chips a tenant lives on, and its
+    crossbar partition within each.
+
+    ``chips`` maps chip name -> intra-chip ``TenancyPlan`` (only chips
+    that received tenants appear); ``routes`` maps tenant -> {chip:
+    traffic fraction} and each row sums to 1 — the router splits a
+    tenant's request stream across its chip replicas in these
+    proportions.  ``archs`` keeps every chip of the fleet (including
+    currently-empty ones) so re-planning can use the whole pool.
+    Purely descriptive state — no clock, thread-safe to share read-only.
+    """
+
+    archs: Dict[str, CIMArch]
+    chips: Dict[str, TenancyPlan]
+    routes: Dict[str, Dict[str, float]]
+
+    @property
+    def tenant_names(self) -> List[str]:
+        """All tenants, in deterministic (sorted) order."""
+        return sorted(self.routes)
+
+    @property
+    def assumed_shares(self) -> Dict[str, float]:
+        """The global traffic shares this plan was built for (summing
+        each tenant's per-chip planned traffic; normalized to 1)."""
+        tot = {}
+        for plan in self.chips.values():
+            for t in plan.tenants.values():
+                tot[t.name] = tot.get(t.name, 0.0) + t.spec.traffic
+        s = sum(tot.values())
+        return {k: v / s for k, v in tot.items()}
+
+    def total_replicas(self, tenant: str) -> int:
+        """Resident weight copies of ``tenant`` across the whole fleet
+        (0 when it is time-multiplexed everywhere)."""
+        n = 0
+        for chip in self.routes.get(tenant, {}):
+            p = self.chips[chip].tenants[tenant]
+            n += p.replicas if p.resident else 0
+        return n
+
+    def validate(self) -> None:
+        """Assert per-chip budgets and route consistency (raises
+        ``AssertionError``)."""
+        for name, plan in self.chips.items():
+            if plan.arch.to_dict() != self.archs[name].to_dict():
+                raise AssertionError(f"chip {name}: plan arch mismatch")
+            plan.validate()
+        for tenant, row in self.routes.items():
+            if not row:
+                raise AssertionError(f"tenant {tenant} routed nowhere")
+            if abs(sum(row.values()) - 1.0) > 1e-6:
+                raise AssertionError(
+                    f"tenant {tenant} route weights sum to "
+                    f"{sum(row.values())}, want 1")
+            for chip, w in row.items():
+                if w <= 0:
+                    raise AssertionError(
+                        f"tenant {tenant} has non-positive weight on "
+                        f"{chip}")
+                if tenant not in self.chips[chip].tenants:
+                    raise AssertionError(
+                        f"tenant {tenant} routed to {chip} but not "
+                        "planned there")
+        for chip, plan in self.chips.items():
+            for t in plan.tenants:
+                if chip not in self.routes.get(t, {}):
+                    raise AssertionError(
+                        f"tenant {t} planned on {chip} but not routed")
+
+    def summary(self) -> str:
+        lines = [f"fleet: {len(self.routes)} tenants on "
+                 f"{len(self.chips)}/{len(self.archs)} chips"]
+        for chip in sorted(self.chips):
+            lines.append(self.chips[chip].summary())
+        for tenant in self.tenant_names:
+            row = ", ".join(f"{c}:{w:.0%}"
+                            for c, w in sorted(self.routes[tenant].items()))
+            lines.append(f"  route {tenant}: {row}")
+        return "\n".join(lines)
+
+    @classmethod
+    def from_split(cls, split: Mapping[str, Sequence[TenantSpec]],
+                   archs: Mapping[str, CIMArch], *,
+                   min_cores: int = 1) -> "FleetPlan":
+        """A pinned plan: each chip serves exactly the tenants ``split``
+        assigns it (no cross-chip replicas).  This is the reference
+        construction for the N-chip == N-independent-fleets
+        bit-exactness property."""
+        chips, routes = {}, {}
+        for chip, specs in split.items():
+            if not specs:
+                continue
+            chips[chip] = plan_tenancy(specs, archs[chip],
+                                       min_cores=min_cores)
+            for s in specs:
+                if s.name in routes:
+                    raise ValueError(
+                        f"tenant {s.name} split onto multiple chips; "
+                        "use plan_fleet for spanning replicas")
+                routes[s.name] = {chip: 1.0}
+        plan = cls(archs=dict(archs), chips=chips, routes=routes)
+        plan.validate()
+        return plan
+
+
+#: route-weight grid: fractions snap to multiples of 1/16 so that
+#: near-identical demand estimates (e.g. EWMA-observed vs true traffic)
+#: produce *identical* routes — jittery weights like 0.51/0.49 would
+#: otherwise quantize into different batch buckets than 0.50/0.50 and
+#: make equivalent plans perform measurably differently
+_ROUTE_GRID = 16
+
+
+def _snap_route(row: Dict[str, float]) -> Dict[str, float]:
+    """Snap a normalized route row onto the ``1/_ROUTE_GRID`` grid
+    (largest-remainder apportionment; every chip keeps >= 1 slot so no
+    planned placement is silently dropped)."""
+    if len(row) <= 1:
+        return {c: 1.0 for c in row}
+    chips = sorted(row)
+    raw = {c: row[c] * _ROUTE_GRID for c in chips}
+    slots = {c: max(1, int(raw[c])) for c in chips}
+    while sum(slots.values()) > _ROUTE_GRID:   # floors + min-1 overshoot
+        c = min((c for c in chips if slots[c] > 1),
+                key=lambda k: raw[k] - slots[k])
+        slots[c] -= 1
+    by_remainder = sorted(chips, key=lambda c: (slots[c] - raw[c], c))
+    for c in by_remainder:
+        if sum(slots.values()) >= _ROUTE_GRID:
+            break
+        slots[c] += 1
+    return {c: slots[c] / _ROUTE_GRID for c in chips}
+
+
+def plan_fleet(tenants: Sequence[TenantSpec],
+               archs: Mapping[str, CIMArch], *, min_cores: int = 1,
+               force_multiplexed: Collection[str] = ()) -> FleetPlan:
+    """Assign tenant -> chip -> crossbar pool over an N-chip fleet.
+
+    Offered load (traffic x per-request service cycles, profiled with
+    the real cost model on each chip's own arch) is water-filled across
+    chip core capacities: tenants in descending-load order each grab
+    the emptiest eligible chip, spilling onto further chips when their
+    demand exceeds what one chip has left — so hot tenants get
+    replicas *spanning* chips while cold ones land whole.  Each chip's
+    subset is then partitioned by ``plan_tenancy`` (per-chip traffic
+    scaled by the split), so all intra-chip invariants hold per chip.
+
+    Deterministic: ties resolve by input order (tenants) and sorted
+    name (chips).  Raises ``ValueError`` when the fleet cannot give
+    every tenant ``min_cores`` somewhere.
+    """
+    tenants = list(tenants)
+    if not tenants:
+        raise ValueError("plan_fleet needs at least one tenant")
+    if not archs:
+        raise ValueError("plan_fleet needs at least one chip")
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"tenant names must be unique, got {names}")
+    archs = dict(archs)
+    chip_names = sorted(archs)
+    capacity = {c: archs[c].chip.n_cores for c in chip_names}
+    if sum(capacity.values()) < min_cores * len(tenants):
+        raise ValueError(
+            f"fleet has {sum(capacity.values())} cores < "
+            f"{min_cores} x {len(tenants)} tenants")
+
+    # offered load per tenant: traffic x mean service cycles across the
+    # (possibly heterogeneous) chips it could land on
+    cycles = {t.name: [_tenant_profile(t, archs[c])[1]
+                       for c in chip_names] for t in tenants}
+    load = {t.name: t.traffic * sum(cycles[t.name]) / len(chip_names)
+            for t in tenants}
+    total_load = sum(load.values())
+    total_cores = sum(capacity.values())
+
+    # -- water-fill demand (in cores) across chip capacities ------------
+    remaining = dict(capacity)
+    assigned: Dict[str, List[str]] = {c: [] for c in chip_names}
+    weights: Dict[str, Dict[str, float]] = {}
+    order = sorted(range(len(tenants)), key=lambda i: (-load[names[i]], i))
+
+    def eligible(c: str, tenant: str) -> bool:
+        # room for one more tenant under the per-chip min_cores floor
+        extra = 0 if tenant in assigned[c] else 1
+        return min_cores * (len(assigned[c]) + extra) <= capacity[c]
+
+    for i in order:
+        spec = tenants[i]
+        demand = max(float(min_cores),
+                     load[spec.name] / total_load * total_cores)
+        weights[spec.name] = {}
+        while demand > 1e-9:
+            open_chips = [c for c in chip_names
+                          if eligible(c, spec.name) and remaining[c] > 0]
+            if not open_chips:
+                break
+            c = max(open_chips, key=lambda k: remaining[k])
+            take = min(demand, remaining[c])
+            # avoid sliver replicas: a spill-over piece worth less than
+            # one core folds into the previous chip's share instead
+            if weights[spec.name] and take < 1.0:
+                break
+            weights[spec.name][c] = weights[spec.name].get(c, 0.0) + take
+            assigned[c] = assigned[c] if spec.name in assigned[c] \
+                else assigned[c] + [spec.name]
+            remaining[c] -= take
+            demand -= take
+        if not weights[spec.name]:
+            # fleet fully claimed: park on the least-crowded eligible
+            # chip (plan_tenancy will time-multiplex it there)
+            fallback = [c for c in chip_names if eligible(c, spec.name)]
+            if not fallback:
+                raise ValueError(
+                    f"no chip can host tenant {spec.name!r} (fleet "
+                    f"capacity {total_cores} cores, {len(tenants)} "
+                    "tenants)")
+            c = max(fallback, key=lambda k: remaining[k])
+            weights[spec.name][c] = float(min_cores)
+            assigned[c] = assigned[c] + [spec.name]
+            remaining[c] -= min_cores
+
+    # -- per-chip tenancy plans over the split traffic -------------------
+    chips: Dict[str, TenancyPlan] = {}
+    routes: Dict[str, Dict[str, float]] = {}
+    for t in tenants:
+        tot = sum(weights[t.name].values())
+        routes[t.name] = _snap_route(
+            {c: w / tot for c, w in weights[t.name].items()})
+    for c in chip_names:
+        subset = [t for t in tenants if c in routes[t.name]]
+        if not subset:
+            continue
+        specs = [dataclasses.replace(t, traffic=t.traffic
+                                     * routes[t.name][c])
+                 for t in subset]
+        chips[c] = plan_tenancy(
+            specs, archs[c], min_cores=min_cores,
+            force_multiplexed=[n for n in force_multiplexed
+                               if any(s.name == n for s in specs)])
+    plan = FleetPlan(archs=archs, chips=chips, routes=routes)
     plan.validate()
     return plan

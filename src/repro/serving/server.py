@@ -23,6 +23,16 @@ from .common import LmRequest as Request  # shared serving primitives
 
 
 class BatchServer:
+    """Slot-based LM batch server over jitted prefill/decode.
+
+    Units and clocks: request ``latency_s`` is **wall-clock seconds**
+    measured around each served batch with ``time.time()`` — this
+    frontend does not take a caller-supplied ``now`` (unlike the CIM
+    fleet).  Thread-safety: not thread-safe; one server instance per
+    thread (the jitted callables are shared safely, the queue walk is
+    not).
+    """
+
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
                  max_len: int = 256):
         self.cfg = cfg
@@ -36,6 +46,9 @@ class BatchServer:
 
     def serve(self, requests: List[Request], greedy: bool = True
               ) -> List[Request]:
+        """Serve all ``requests`` to completion in slot-sized batches;
+        fills each request's ``output`` tokens and wall-clock
+        ``latency_s``, returning the requests in completion order."""
         queue = deque(requests)
         done: List[Request] = []
         while queue:

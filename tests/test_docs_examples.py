@@ -1,5 +1,6 @@
-"""The docs stay true: every fenced ``python`` block in docs/DSE.md
-executes, and every relative markdown link in README.md / docs/ resolves.
+"""The docs stay true: every fenced ``python`` block in the guides
+(docs/DSE.md, docs/SERVING.md, docs/FLEET.md) executes, and every
+relative markdown link in README.md / docs/ resolves.
 
 Blocks run in file order inside one shared namespace (like a reader
 pasting them into one session), with the compile cache pointed at a
@@ -48,6 +49,24 @@ def test_serving_doc_snippets_execute(tmp_path, monkeypatch):
     # the guide's narrative claims, re-checked here explicitly
     assert ns["plan"].cores_used <= ns["arch"].chip.n_cores
     assert ns["fleet"].stats().aggregate.requests >= 9
+
+
+def test_fleet_doc_snippets_execute(tmp_path, monkeypatch):
+    import tempfile
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", str(tmp_path / "cache"))
+    monkeypatch.setattr(tempfile, "tempdir", str(tmp_path))
+    blocks = python_blocks(REPO / "docs" / "FLEET.md")
+    assert len(blocks) >= 5, "docs/FLEET.md lost its executable snippets"
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        block = block.replace("/tmp/fleet_trace.json",
+                              str(tmp_path / "fleet_trace.json"))
+        code = compile(block, f"docs/FLEET.md[python block {i}]", "exec")
+        exec(code, ns)   # noqa: S102 — executing our own documentation
+    # the guide's narrative claims, re-checked here explicitly
+    assert ns["cluster"].migrations >= 1          # drift section replans
+    assert len(ns["served"]) == len(ns["accepted"])   # ladder never drops
+    assert len(ns["trace"]["traceEvents"]) > 0
 
 
 def test_architecture_doc_mentions_every_package():

@@ -1,0 +1,276 @@
+"""Cross-chip fleet serving: 2-D placement, cluster bit-exactness vs
+independent single-chip fleets, drift-driven re-planning, the overload
+degradation ladder, Chrome-trace round-trips and synthetic traffic
+determinism."""
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.cimsim.functional import make_input
+from repro.core.abstraction import get_arch
+from repro.serving import (AdmissionError, CimCluster, CimFleet,
+                           CimRequest, FleetPlan, ReplanPolicy, TenantSpec,
+                           TraceRecorder, TrafficModel, load_trace,
+                           plan_fleet, synthetic_trace,
+                           validate_chrome_trace)
+from repro.workloads import get_workload
+
+ISAAC = get_arch("isaac-baseline")
+CNN = get_workload("tiny_cnn")
+MLP = get_workload("tiny_mlp")
+GRAPHS = {"cnn": CNN, "mlp": MLP}
+
+
+def _chips(n0=8, n1=8):
+    return {"c0": ISAAC.subarch(n0, f"isaac-{n0}c-a"),
+            "c1": ISAAC.subarch(n1, f"isaac-{n1}c-b")}
+
+
+def _tenants(tc=3.0, tm=1.0, pc=1, pm=0):
+    return [TenantSpec("cnn", CNN, traffic=tc, priority=pc),
+            TenantSpec("mlp", MLP, traffic=tm, priority=pm)]
+
+
+def _requests(n, rid_base=0):
+    out = []
+    for i in range(n):
+        model = ("cnn", "mlp")[i % 2]
+        rid = rid_base + i
+        out.append(CimRequest(rid=rid, model=model,
+                              inputs=make_input(GRAPHS[model], rid)))
+    return out
+
+
+# ------------------------------------------------------------- placement
+
+def test_plan_fleet_budget_and_routes():
+    chips = _chips()
+    for tc, tm in ((1, 1), (10, 1), (1, 10)):
+        plan = plan_fleet(_tenants(tc, tm), chips)
+        plan.validate()                     # budgets + route consistency
+        for tenant, row in plan.routes.items():
+            assert abs(sum(row.values()) - 1.0) < 1e-9
+        assert set(plan.routes) == {"cnn", "mlp"}
+
+
+def test_plan_fleet_heterogeneous_chips_spans_hot_tenant():
+    # a hot tenant with more offered load than one chip's share should
+    # span chips (replicas on both), while the planner keeps every
+    # per-chip budget honest
+    chips = _chips(8, 8)
+    plan = plan_fleet(_tenants(20.0, 1.0), chips)
+    plan.validate()
+    assert len(plan.routes["cnn"]) >= 1
+    assert plan.total_replicas("cnn") >= 2
+
+
+def test_from_split_rejects_multi_chip_tenant():
+    chips = _chips()
+    with pytest.raises(ValueError, match="multiple chips"):
+        FleetPlan.from_split({"c0": [_tenants()[0]],
+                              "c1": [_tenants()[0]]}, chips)
+
+
+# ------------------------------------------------------- bit-exactness
+
+def test_cluster_bitexact_vs_independent_single_chip_fleets():
+    # acceptance criterion: an N-chip cluster must produce bit-exact
+    # outputs vs N independent single-chip fleets given the same tenant
+    # split — placement/routing must never touch numerics
+    chips = _chips()
+    cnn_spec, mlp_spec = _tenants()
+    split = {"c0": [cnn_spec], "c1": [mlp_spec]}
+    plan = FleetPlan.from_split(split, chips)
+    cluster = CimCluster(_tenants(), chips, plan=plan, max_wait_s=0.0)
+
+    reqs = _requests(12)
+    done = cluster.serve(copy.deepcopy(reqs), now=0.0)
+    assert len(done) == len(reqs)
+    by_rid = {r.rid: r for r in done}
+
+    f0 = CimFleet([cnn_spec], chips["c0"], max_wait_s=0.0)
+    f1 = CimFleet([mlp_spec], chips["c1"], max_wait_s=0.0)
+    for r in copy.deepcopy(reqs):
+        ref = (f0 if r.model == "cnn" else f1).serve([r], now=0.0)[0]
+        got = by_rid[ref.rid]
+        assert got.outputs is not None and ref.outputs is not None
+        for t in ref.outputs:
+            np.testing.assert_array_equal(got.outputs[t], ref.outputs[t])
+
+
+def test_cluster_routes_same_object_back_to_caller():
+    chips = _chips()
+    cluster = CimCluster(_tenants(), chips, max_wait_s=0.0)
+    req = cluster.submit("mlp", make_input(MLP, 7), now=0.0)
+    assert req.outputs is None
+    cluster.drain(now=0.0)
+    assert req.outputs is not None          # caller's object was served
+
+
+# ------------------------------------------------- drift + re-planning
+
+def test_cluster_replans_under_traffic_drift():
+    chips = _chips()
+    cluster = CimCluster(
+        _tenants(3.0, 1.0), chips, max_wait_s=0.0,
+        policy=ReplanPolicy(min_requests=8, drift_threshold=0.4))
+    assumed = cluster.plan.assumed_shares
+    assert assumed["cnn"] > assumed["mlp"]  # planned for a cnn-heavy mix
+    clock, rid = 0.0, 0
+    for _ in range(4):                      # actual traffic is all-mlp
+        for i in range(12):
+            cluster.submit("mlp", make_input(MLP, rid), now=clock + i * 0.5)
+            rid += 1
+        done = cluster.drain(now=clock + 6.0)
+        assert len(done) == 12              # nothing dropped across replans
+        assert all(r.outputs is not None for r in done)
+        clock += 6.0
+        cluster.control(now=clock)
+    assert cluster.migrations >= 1
+    # the re-planned fleet now assumes an mlp-heavy mix
+    shares = cluster.plan.assumed_shares
+    assert shares["mlp"] > shares["cnn"]
+
+
+def test_cluster_migration_carries_pending_requests():
+    chips = _chips()
+    cluster = CimCluster(
+        _tenants(), chips, max_wait_s=0.0,
+        policy=ReplanPolicy(min_requests=4, drift_threshold=0.3))
+    # queue work, then force a drift re-plan *before* dispatching it
+    held = [cluster.submit("mlp", make_input(MLP, i), now=0.1 * i)
+            for i in range(8)]
+    cluster.control(now=2.0)
+    assert cluster.migrations >= 1          # plan flipped to all-mlp mix
+    assert cluster.pending == len(held)     # nothing dropped by migration
+    cluster.drain(now=3.0)
+    assert all(r.outputs is not None for r in held)
+
+
+# ------------------------------------------------- degradation ladder
+
+def test_overload_degrades_then_rejects_typed():
+    # 2x-planned traffic on a small chip: the ladder must demote the
+    # lowest-priority tenant first, then reject with a typed error —
+    # and every accepted request must still be served (no deadlock, no
+    # silent drop)
+    chips = {"c0": ISAAC.subarch(6, "isaac-6c")}
+    cluster = CimCluster(_tenants(1.0, 1.0, pc=1, pm=0), chips,
+                         max_wait_s=0.0, max_queue=4)
+    accepted, rejected = [], 0
+    for i in range(40):
+        try:
+            accepted.append(cluster.submit("cnn", make_input(CNN, i),
+                                           now=0.0))
+        except AdmissionError as e:
+            rejected += 1
+            assert e.model == "cnn" and e.limit == 4
+            assert e.pending >= e.limit
+    assert cluster.demotions >= 1           # ladder step 1: demote mlp
+    assert "mlp" in cluster.demoted
+    assert not cluster.plan.chips["c0"].tenants["mlp"].resident
+    assert rejected > 0                     # ladder exhausted: typed reject
+    done = cluster.drain(now=1.0)
+    assert len(done) == len(accepted)       # accepted work all served
+    assert all(r.outputs is not None for r in done)
+
+
+def test_lowest_priority_tenant_is_never_shed_for_equal_priority():
+    chips = {"c0": ISAAC.subarch(6, "isaac-6c")}
+    cluster = CimCluster(_tenants(1.0, 1.0, pc=0, pm=0), chips,
+                         max_wait_s=0.0, max_queue=2)
+    with pytest.raises(AdmissionError):     # no strictly-lower victim
+        for i in range(10):
+            cluster.submit("cnn", make_input(CNN, i), now=0.0)
+    assert cluster.demotions == 0
+
+
+# ------------------------------------------------------- observability
+
+def test_trace_roundtrip_and_schema(tmp_path):
+    chips = _chips()
+    tr = TraceRecorder()
+    cluster = CimCluster(
+        _tenants(), chips, max_wait_s=0.0, trace=tr,
+        policy=ReplanPolicy(min_requests=4, drift_threshold=0.3))
+    clock = 0.0
+    for rnd in range(3):
+        for r in _requests(8, rid_base=rnd * 8):
+            cluster.submit_request(r, now=clock + 0.1)
+        cluster.drain(now=clock + 1.0)
+        clock += 1.0
+        cluster.control(now=clock)
+    assert len(tr) > 0
+    phases = {ev["ph"] for ev in tr.events}
+    assert {"X", "C", "M"} <= phases        # spans, counters, metadata
+    cats = {ev.get("cat") for ev in tr.events}
+    assert "batcher" in cats and "engine" in cats
+    path = tr.save(tmp_path / "trace.json")
+    loaded = load_trace(path)               # validates on load
+    assert loaded["traceEvents"] == json.loads(
+        path.read_text())["traceEvents"]
+    # schema guard: Perfetto-required fields on every event
+    for ev in loaded["traceEvents"]:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(ev)
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace({"events": []})
+    with pytest.raises(ValueError, match="missing field"):
+        validate_chrome_trace({"traceEvents": [{"name": "x", "ph": "X"}]})
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "x", "ph": "Z", "ts": 0, "pid": 1, "tid": 0}]})
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "x", "ph": "X", "ts": 0, "pid": 1, "tid": 0}]})
+    with pytest.raises(ValueError, match="never registered"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "process_name", "ph": "M", "ts": 0, "pid": 1,
+             "tid": 0, "args": {"name": "chip:c0"}},
+            {"name": "x", "ph": "i", "ts": 0, "pid": 9, "tid": 0}]})
+
+
+# ------------------------------------------------------- traffic model
+
+def test_synthetic_trace_is_deterministic_and_shaped():
+    model = TrafficModel(users=1e6, diurnal_amp=0.6, bursts_per_day=4)
+    a = synthetic_trace(GRAPHS, 64, 3600.0, shares={"cnn": 1, "mlp": 1},
+                        model=model, seed=11, deadline_s=0.5)
+    b = synthetic_trace(GRAPHS, 64, 3600.0, shares={"cnn": 1, "mlp": 1},
+                        model=model, seed=11, deadline_s=0.5)
+    assert [(r.rid, r.model, r.arrival_s) for r in a] == \
+        [(r.rid, r.model, r.arrival_s) for r in b]
+    arrivals = [r.arrival_s for r in a]
+    assert arrivals == sorted(arrivals)
+    assert 0.0 <= arrivals[0] and arrivals[-1] < 3600.0
+    assert all(r.deadline_s == pytest.approx(r.arrival_s + 0.5) for r in a)
+    assert {r.model for r in a} == {"cnn", "mlp"}
+
+
+def test_synthetic_trace_share_drift_is_honored():
+    # callable shares: first half all-cnn, second half all-mlp
+    def shares(t_s):
+        return {"cnn": 1.0, "mlp": 0.0} if t_s < 500.0 \
+            else {"cnn": 0.0, "mlp": 1.0}
+    model = TrafficModel(diurnal_amp=0.0, bursts_per_day=0.0)
+    trace = synthetic_trace(GRAPHS, 40, 1000.0, shares=shares,
+                            model=model, seed=3)
+    for r in trace:
+        assert r.model == ("cnn" if r.arrival_s < 500.0 else "mlp")
+
+
+def test_traffic_model_validation_and_rates():
+    with pytest.raises(ValueError, match="diurnal_amp"):
+        TrafficModel(diurnal_amp=1.5)
+    with pytest.raises(ValueError, match="burst_mult"):
+        TrafficModel(burst_mult=0.5)
+    m = TrafficModel(users=864_000.0, req_per_user_day=1.0)
+    assert m.mean_rps == pytest.approx(10.0)
+    peak_t = m.peak_hour / 24.0 * m.day_s
+    assert m.diurnal(peak_t) == pytest.approx(1.0 + m.diurnal_amp)
+    assert m.rps(peak_t, burst=True) == \
+        pytest.approx(m.rps(peak_t) * m.burst_mult)

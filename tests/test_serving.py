@@ -156,10 +156,16 @@ def test_service_stats_latency_window_is_bounded():
     from repro.serving.common import LATENCY_WINDOW
     s = ServiceStats()
     for _ in range(3):
-        s.record([1.0] * LATENCY_WINDOW, batch_s=1.0)
+        s.record([1.0] * LATENCY_WINDOW, batch_s=1.0, misses=2)
     assert s.requests == 3 * LATENCY_WINDOW      # counters stay all-time
-    assert len(s.latencies_s) == LATENCY_WINDOW  # tails stay windowed
-    assert len(s.merge(s).latencies_s) == LATENCY_WINDOW
+    assert s.deadline_misses == 6                # misses stay all-time
+    # tails + windowed misses stay windowed
+    assert len(s.window_latencies_s) == LATENCY_WINDOW
+    assert len(s.window_missed) == LATENCY_WINDOW
+    assert s.window_deadline_misses == 2         # only the last batch's
+    m = s.merge(s)
+    assert len(m.window_latencies_s) == LATENCY_WINDOW
+    assert m.deadline_misses == 12 and m.window_deadline_misses == 2
 
 
 def test_fleet_rejects_mismatched_plan():
