@@ -1,5 +1,12 @@
-"""cim_mvm kernel micro-benchmark (interpret mode on CPU; the numbers
-locate the oracle/kernel overhead, not TPU performance)."""
+"""cim_mvm kernel micro-benchmark across backend-registry routes.
+
+One row per (shape, route) for every route the active platform
+supports — ``xla`` (the XLA-compiled oracle, the fast CPU path),
+``interpret`` (the Pallas interpreter, validation-only), and
+``compiled`` (a real ``pallas_call``) on TPU/GPU hosts.  On CPU the
+numbers locate oracle/interpreter overhead, not accelerator
+performance.
+"""
 from __future__ import annotations
 
 import time
@@ -8,7 +15,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from cim_common import smoke_subset
+from repro.kernels import backend
 from repro.kernels.cim_mvm import cim_mvm, cim_mvm_tiles, CimMvmParams
+
+#: every route the registry supports here, benchmarked side by side
+ROUTES = backend.REGISTRY["cim_mvm"].modes_on(backend.detect_platform())
 
 
 def rows():
@@ -18,35 +29,37 @@ def rows():
     for (m, r, c) in smoke_subset(((64, 128, 128), (128, 1152, 256))):
         x = jnp.asarray(rng.integers(0, 256, (m, r)), jnp.int32)
         w = jnp.asarray(rng.integers(0, 256, (r, c)), jnp.int32)
-        for use_kernel, tag in ((True, "pallas_interpret"), (False, "oracle")):
-            cim_mvm(x, w, p, use_kernel=use_kernel).block_until_ready()
+        for mode in ROUTES:
+            cim_mvm(x, w, p, mode=mode).block_until_ready()   # warm jit
             t0 = time.time()
             n = 3
             for _ in range(n):
-                cim_mvm(x, w, p, use_kernel=use_kernel).block_until_ready()
+                cim_mvm(x, w, p, mode=mode).block_until_ready()
             us = (time.time() - t0) / n * 1e6
-            out.append((f"kernel_{tag}_{m}x{r}x{c}_us", us, ""))
+            out.append((f"kernel_{mode}_{m}x{r}x{c}_us", us, ""))
 
     # executor-style tile batching: T crossbar tiles in one dispatch vs
     # one oracle dispatch per tile (the interpreter's access pattern);
     # shapes mirror real per-node tile sets, where dispatch overhead
     # dominates the small per-tile compute
+    tiles_mode = backend.resolve("cim_mvm_tiles").mode     # auto route
     for (t_tiles, m, r, c) in smoke_subset(((16, 16, 32, 32),
                                             (64, 16, 128, 32))):
         xt = jnp.asarray(rng.integers(0, 256, (t_tiles, m, r)), jnp.int32)
         wt = jnp.asarray(rng.integers(0, 256, (t_tiles, r, c)), jnp.int32)
 
         def batched():
-            cim_mvm_tiles(xt, wt, p).block_until_ready()
+            cim_mvm_tiles(xt, wt, p, mode=tiles_mode).block_until_ready()
 
         def per_tile():
             for i in range(t_tiles):
-                cim_mvm(xt[i], wt[i], p, use_kernel=False).block_until_ready()
+                cim_mvm(xt[i], wt[i], p, mode="xla").block_until_ready()
 
         for fn in (batched, per_tile):
             fn()                      # warm the jit caches
         n = 3
-        for fn, tag in ((batched, "tiles_batched"), (per_tile, "tiles_loop")):
+        for fn, tag in ((batched, f"tiles_batched_{tiles_mode}"),
+                        (per_tile, "tiles_loop")):
             t0 = time.time()
             for _ in range(n):
                 fn()

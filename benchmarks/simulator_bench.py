@@ -1,13 +1,15 @@
 """Functional-simulation benchmark: op-by-op interpreter vs the
 trace-lowered batched executor (cimsim.executor), single-inference and
-batched.
+batched — plus the streamed multi-segment cell (weight-update streaming
+vs the interpreter walk it replaces) and per-route ``cim_mvm_tiles``
+kernel timings from the backend registry.
 
 Emits ``BENCH_simulator.json`` next to this script (override the path
 with ``REPRO_BENCH_SIM_JSON``; under ``REPRO_BENCH_SMOKE=1`` nothing is
 written unless the override is set) so future PRs can regress-check the
 perf trajectory: the executor must stay >=10x faster than the
-interpreter on ResNet single-inference and batch=8 must cost <4x
-batch=1.
+interpreter on ResNet single-inference, batch=8 must cost <4x batch=1,
+and the streamed-segment cell must stay >=5x over the interpreter.
 
 Note the full (non-smoke) run interprets ResNet once op by op — that is
 the point being measured and takes a few minutes.
@@ -91,12 +93,41 @@ def _measure_cell(tag: str, workload, arch, *, interp_runs: int = 1,
         if "8" in batch_ms else None,
         "units": exe.stats.units,
         "dispatches": exe.stats.dispatches,
+        "segments": exe.stats.segments,
+        "streamed": exe.stats.streamed,
+        "swaps": exe.stats.swaps,
+        "kernel_mode": exe.stats.kernel_mode,
     }
+
+
+def _segmented_arch():
+    """A chip deliberately too small for tiny workloads: compiles to a
+    multi-segment schedule, so the executor's weight-update streaming
+    path (traced crossbar-pool swaps) is what gets measured."""
+    from repro.core.abstraction import (CellType, ChipTier, CIMArch,
+                                        ComputingMode, CoreTier,
+                                        CrossbarTier)
+    return CIMArch(
+        name="wlm-2c-seg", mode=ComputingMode.WLM,
+        chip=ChipTier(core_number=(2, 1), alu_ops_per_cycle=64,
+                      l0_bw_bits=1024),
+        core=CoreTier(xb_number=(1, 1), l1_bw_bits=1024),
+        xb=CrossbarTier(xb_size=(32, 32), dac_bits=1, adc_bits=8,
+                        cell_type=CellType.SRAM, cell_precision=2,
+                        parallel_row=8),
+    )
 
 
 def cells() -> list:
     out = [_measure_cell("tiny_cnn/toy", "tiny_cnn", get_arch("toy"),
                          interp_runs=1 if SMOKE else 3)]
+    # streamed multi-segment cell: interpreter walk vs weight-update
+    # streaming through the traced executor (the fallback it replaces)
+    out.append(_measure_cell(
+        "tiny_mlp@seg/wlm-2c" if SMOKE else "tiny_cnn@seg/wlm-2c",
+        "tiny_mlp" if SMOKE else "tiny_cnn", _segmented_arch(),
+        interp_runs=1 if SMOKE else 3))
+    assert out[-1]["streamed"] and out[-1]["segments"] > 1
     if not SMOKE:
         out.append(_measure_cell(
             "resnet18@16/isaac", get_workload("resnet18", in_hw=16),
@@ -104,8 +135,33 @@ def cells() -> list:
     return out
 
 
+def kernel_backend() -> dict:
+    """Per-route ``cim_mvm_tiles`` timings from the backend registry —
+    the accelerator rows land here when an accel host runs this."""
+    import jax.numpy as jnp
+    from repro.kernels import backend
+    from repro.kernels.cim_mvm import CimMvmParams, cim_mvm_tiles
+    p = CimMvmParams(8, 8, 1, 2, 8, 8)
+    rng = np.random.default_rng(0)
+    t, m, r, c = (8, 16, 32, 32) if SMOKE else (64, 16, 128, 32)
+    xt = jnp.asarray(rng.integers(0, 256, (t, m, r)), jnp.int32)
+    wt = jnp.asarray(rng.integers(0, 256, (t, r, c)), jnp.int32)
+    platform = backend.detect_platform()
+    route_us = {}
+    for mode in backend.REGISTRY["cim_mvm_tiles"].modes_on(platform):
+        cim_mvm_tiles(xt, wt, p, mode=mode).block_until_ready()   # warm
+        us = _steady_ms(
+            lambda: cim_mvm_tiles(xt, wt, p, mode=mode).block_until_ready(),
+            3) * 1e3
+        route_us[mode] = round(us, 1)
+    return {"platform": platform,
+            "auto_mode": backend.resolve("cim_mvm_tiles").mode,
+            "shape": [t, m, r, c], "route_us": route_us}
+
+
 def rows():
-    data = {"schema": 1, "smoke": SMOKE, "cells": cells()}
+    data = {"schema": 2, "smoke": SMOKE, "cells": cells(),
+            "kernel_backend": kernel_backend()}
     path = os.environ.get("REPRO_BENCH_SIM_JSON")
     if path or not SMOKE:
         path = Path(path) if path else \
@@ -123,6 +179,13 @@ def rows():
         if c["batch8_over_batch1"] is not None:
             out.append((f"sim_batch8_cost_{tag}_x", c["batch8_over_batch1"],
                         "<4x = sublinear"))
+        if c["streamed"]:
+            out.append((f"sim_swaps_{tag}", c["swaps"],
+                        "traced weight-pool updates"))
+    kb = data["kernel_backend"]
+    for mode, us in kb["route_us"].items():
+        out.append((f"sim_kernel_tiles_{mode}_us", us,
+                    f"{kb['platform']} route"))
     return out
 
 

@@ -20,7 +20,25 @@ jitted executable with the same bit-exact semantics:
     ``jax.pure_callback`` so they stay bit-identical to the NumPy
     reference);
   * every tensor carries a leading batch axis, so N inferences execute
-    in one dispatch (``run_batch``).
+    in one dispatch (``run_batch``);
+  * **multi-segment schedules stream weight updates through the trace**:
+    when the compile reprograms crossbars between segments (the
+    serving stack's time-multiplexed tenants, over-budget workloads),
+    the lowering models the physical crossbar pool as per-shape device
+    buffers whose contents are swapped at every segment boundary by
+    traced updates — each node reads its tiles from the pool state of
+    *its* segment, so the jitted program carries the same
+    write-then-read dependence chain the hardware does and the
+    device-resident weight working set is bounded by the pool, not by
+    the sum of all segments' weights.  ``stream="auto"`` (default)
+    enables this exactly when ``len(plan.segments) > 1``.
+
+How the MVM itself executes — compiled Pallas kernel, Pallas
+interpreter, or the XLA-compiled oracle — is a
+``kernels.backend`` registry decision (see ``KernelRoute``); a route
+the registry cannot satisfy on the active platform surfaces as
+``LoweringError`` so callers keep their documented interpreter
+fallback.
 
 Lowering is cached process-wide, keyed by the *content* of the compile
 (``compiler.compile_key_for_plan``) x the crossbar compute params — a
@@ -43,7 +61,9 @@ from ..core.abstraction import CIMArch
 from ..core.cg_opt import OpPlacement, SchedulePlan
 from ..core.graph import Graph, Node, weight_matrix_shape
 from ..core.mop import Program
-from ..kernels.cim_mvm import CimMvmParams, cim_mvm_params, cim_mvm_tiles
+from ..kernels import backend
+from ..kernels.cim_mvm import CimMvmParams, cim_mvm_params
+from ..kernels.cim_mvm.ops import _cim_mvm_tiles_impl
 from .functional import (_float_dcom, chunk_offsets, spread_slice,
                          tile_ranges)
 
@@ -67,9 +87,34 @@ _SHIFTED_DCOM = {"Add", "Mul", "MatMul"}
 
 
 class LoweringError(ValueError):
-    """The program cannot be trace-lowered bit-exactly (unsupported op
-    or int32 overflow risk); callers should fall back to the
-    interpreter."""
+    """The program cannot be trace-lowered bit-exactly (unsupported op,
+    int32 overflow risk, or the backend registry cannot satisfy the
+    requested kernel route on this platform); callers should fall back
+    to the interpreter."""
+
+
+def _resolve_executor_route(route: Optional[backend.KernelRoute],
+                            mode: Optional[str],
+                            use_kernel: Optional[bool],
+                            interpret: Optional[bool]
+                            ) -> backend.KernelRoute:
+    """The executor's MVM route: registry-resolved, LoweringError on an
+    unsupportable request (so callers keep their interpreter fallback).
+
+    ``use_kernel``/``interpret`` keep the pre-registry boolean calling
+    convention alive (executor legacy default was the oracle path).
+    """
+    try:
+        if use_kernel is not None or interpret is not None:
+            uk = bool(use_kernel)            # legacy default: False
+            legacy = "xla" if not uk else \
+                ("compiled" if interpret is False else "interpret")
+            return backend.resolve("cim_mvm_tiles", mode=legacy)
+        if route is not None:
+            return route
+        return backend.resolve("cim_mvm_tiles", mode=mode)
+    except backend.KernelUnsupportedError as e:
+        raise LoweringError(str(e)) from None
 
 
 @dataclasses.dataclass
@@ -81,6 +126,10 @@ class ExecutorStats:
     units: int = 0          # crossbar read units folded into dispatches
     dispatches: int = 0     # batched MVM invocations in the traced graph
     matmul_nodes: int = 0   # exact-ADC nodes lowered to one int matmul
+    segments: int = 1       # schedule segments of the compiled plan
+    streamed: bool = False  # weight-update streaming active (multi-segment)
+    swaps: int = 0          # traced segment-boundary weight-pool updates
+    kernel_mode: str = ""   # resolved cim_mvm_tiles route (backend registry)
 
     @property
     def cim_reads(self) -> int:   # SimStats-compatible accessor
@@ -100,6 +149,28 @@ class _Bucket:
         return f"{self.r_len}x{self.c_len}"
 
 
+@dataclasses.dataclass(frozen=True)
+class _StreamGroup:
+    """Same-shaped tiles of one node living in one schedule segment.
+
+    The streamed twin of ``_Bucket``: tiles are not packed per node but
+    occupy slots ``[lo, hi)`` of the shared per-shape crossbar pool for
+    the duration of segment ``seg`` — the node's dispatch slices them
+    out of that segment's pool state.
+    """
+
+    seg: int
+    spans: Tuple[Tuple[int, int, int, int], ...]
+    r_len: int
+    c_len: int
+    lo: int                          # first pool slot (static)
+    hi: int                          # one past the last pool slot
+
+    @property
+    def key(self) -> str:
+        return f"{self.r_len}x{self.c_len}"
+
+
 @dataclasses.dataclass
 class _CimPlan:
     """Static lowering of one CIM node."""
@@ -113,6 +184,7 @@ class _CimPlan:
     conv_out: Optional[Tuple[int, int, int]] = None   # (cout, oh, ow)
     im2col_idx: Optional[np.ndarray] = None           # (M, C*k*k) gather
     pad: int = 0
+    stream_groups: Tuple[_StreamGroup, ...] = ()      # streamed mode only
 
 
 def _im2col_indices(cin: int, h: int, w: int, k: int, stride: int,
@@ -147,10 +219,12 @@ def _pool_indices(h: int, w: int, k: int, stride: int, pad: int
 
 def _collect_units(program: Program, placements: Dict[Tuple[str, int],
                                                       OpPlacement],
-                   graph: Graph, arch: CIMArch
-                   ) -> Dict[str, List[Tuple[int, int, int, int]]]:
+                   graph: Graph, arch: CIMArch,
+                   seg_of: Dict[Tuple[str, int], int]
+                   ) -> Dict[str, List[Tuple[Tuple[int, int, int, int], int]]]:
     """Walk the (possibly Loop-compressed) program once and resolve every
-    distinct crossbar read into a weight-matrix span (r0, r1, c0, c1).
+    distinct crossbar read into a weight-matrix span (r0, r1, c0, c1)
+    tagged with the schedule segment its chunk is placed in.
 
     Copies and windows are emission-side parallelism: every copy reads
     the same tiles and each window row is handled by exactly one copy,
@@ -167,7 +241,7 @@ def _collect_units(program: Program, placements: Dict[Tuple[str, int],
             seen.setdefault((k, a["op"], a.get("chunk", 0),
                              a.get("row_tile", 0), a.get("col_tile", 0),
                              a.get("spread", 0)))
-    units: Dict[str, List[Tuple[int, int, int, int]]] = {}
+    units: Dict[str, List[Tuple[Tuple[int, int, int, int], int]]] = {}
     for key in seen:
         if key[0] == "core":
             _, name, chunk = key
@@ -196,7 +270,8 @@ def _collect_units(program: Program, placements: Dict[Tuple[str, int],
                 r_lo, r_hi = r_lo + ss[0], r_lo + ss[1]
             span = (r_lo, r_hi, c_lo, c_hi)
         if span[1] > span[0] and span[3] > span[2]:
-            units.setdefault(name, []).append(span)
+            units.setdefault(name, []).append(
+                (span, seg_of.get((name, key[2]), 0)))
     return units
 
 
@@ -211,15 +286,25 @@ class LoweredExecutable:
 
     def __init__(self, plan: SchedulePlan, program: Program,
                  params: Optional[CimMvmParams] = None, *,
-                 use_kernel: bool = False, interpret: bool = True):
+                 mode: Optional[str] = None,
+                 stream="auto",
+                 route: Optional[backend.KernelRoute] = None,
+                 use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
         import jax
         self.plan = plan
         self.graph: Graph = plan.graph
         self.arch: CIMArch = plan.arch
         self.params = params or cim_mvm_params(plan.arch)
-        self.use_kernel = use_kernel
-        self.interpret = interpret
-        self.stats = ExecutorStats()
+        self.route = _resolve_executor_route(route, mode, use_kernel,
+                                             interpret)
+        self._n_segments = max(1, len(plan.segments))
+        if stream == "auto":
+            stream = self._n_segments > 1
+        self._stream = bool(stream)
+        self.stats = ExecutorStats(segments=self._n_segments,
+                                   streamed=self._stream,
+                                   kernel_mode=self.route.mode)
         self._ox = 1 << (self.params.act_bits - 1)
         self._ow = 1 << (self.params.weight_bits - 1)
 
@@ -229,12 +314,30 @@ class LoweredExecutable:
         if unsupported:
             raise LoweringError(f"no bit-exact lowering for {unsupported}")
 
+        seg_of = {(p.node.name, p.chunk): si
+                  for si, seg in enumerate(plan.segments)
+                  for p in seg.placements}
         placements = {(p.node.name, p.chunk): p for p in plan.placements}
-        units = _collect_units(program, placements, self.graph, self.arch)
+        units = _collect_units(program, placements, self.graph, self.arch,
+                               seg_of)
+        #: streamed-mode crossbar-pool layout: per (segment, shape key)
+        #: the tiles resident there, in slot order (drives ``pack``)
+        self._seg_layout: Dict[Tuple[int, str],
+                               List[Tuple[str, Tuple[int, int, int, int]]]] \
+            = {}
+        self._seg_cursor: Dict[Tuple[int, str], int] = {}
         self._plans: Dict[str, _CimPlan] = {}
         for node in self.graph.cim_nodes:
             self._plans[node.name] = self._lower_cim_node(node,
                                                           units.get(node.name))
+        #: per-shape pool depth = the largest simultaneous (per-segment)
+        #: tile count — the device working set a real crossbar pool holds
+        self._pool_shapes: Dict[str, Tuple[int, int, int]] = {}
+        for (seg, key), n in self._seg_cursor.items():
+            rl, cl = (int(v) for v in key.split("x"))
+            depth = max(n, self._pool_shapes.get(key, (0,))[0])
+            self._pool_shapes[key] = (depth, rl, cl)
+        self.stats.swaps = len(self._seg_layout)
         self._pool_idx: Dict[str, np.ndarray] = {}
         for node in self.graph.nodes:
             if node.op_type in ("MaxPool", "AveragePool"):
@@ -252,11 +355,13 @@ class LoweredExecutable:
 
     # -- lowering ---------------------------------------------------------
     def _lower_cim_node(self, node: Node,
-                        spans: Optional[Sequence[Tuple[int, int, int, int]]]
+                        tagged: Optional[Sequence[Tuple[
+                            Tuple[int, int, int, int], int]]]
                         ) -> _CimPlan:
         total_r, total_c = weight_matrix_shape(node)
-        if not spans:
+        if not tagged:
             raise LoweringError(f"{node.name}: no crossbar reads emitted")
+        spans = [span for span, _ in tagged]
         covered = sum((r1 - r0) * (c1 - c0) for r0, r1, c0, c1 in spans)
         if covered != total_r * total_c:
             raise LoweringError(
@@ -277,15 +382,43 @@ class LoweredExecutable:
         buckets = [_Bucket(spans=tuple(group), r_len=rl, c_len=cl)
                    for (rl, cl), group in sorted(by_shape.items())]
 
-        exact = self.params.exact
+        stream_groups: Tuple[_StreamGroup, ...] = ()
+        if self._stream:
+            # streamed mode: tiles live in the shared per-shape crossbar
+            # pool only for their segment — group per (segment, shape)
+            # and claim contiguous slots from that segment's cursor
+            by_ss: Dict[Tuple[int, int, int],
+                        List[Tuple[int, int, int, int]]] = {}
+            for span, seg in sorted(tagged, key=lambda t: (t[1], t[0])):
+                r0, r1, c0, c1 = span
+                by_ss.setdefault((seg, r1 - r0, c1 - c0), []).append(span)
+            groups = []
+            for (seg, rl, cl), group in sorted(by_ss.items()):
+                key = f"{rl}x{cl}"
+                lo = self._seg_cursor.get((seg, key), 0)
+                hi = lo + len(group)
+                self._seg_cursor[(seg, key)] = hi
+                self._seg_layout.setdefault((seg, key), []).extend(
+                    (node.name, s) for s in group)
+                groups.append(_StreamGroup(seg=seg, spans=tuple(group),
+                                           r_len=rl, c_len=cl, lo=lo,
+                                           hi=hi))
+            stream_groups = tuple(groups)
+
+        # streamed mode always rides the tile path: the pool models
+        # physical crossbar residency, which the whole-matrix matmul
+        # shortcut would bypass
+        exact = self.params.exact and not self._stream
         self.stats.cim_nodes += 1
         self.stats.units += len(spans)
-        self.stats.dispatches += 1 if exact else len(buckets)
+        self.stats.dispatches += len(stream_groups) if self._stream \
+            else (1 if exact else len(buckets))
         self.stats.matmul_nodes += int(exact)
 
         cp = _CimPlan(node=node, r=total_r, c=total_c, exact=exact,
                       buckets=buckets,
-                      vector_in=len(self.graph.shapes[node.inputs[0]]) == 1)
+                      vector_in=len(self.graph.shapes[node.inputs[0]]) == 1,
+                      stream_groups=stream_groups)
         if node.op_type == "Conv":
             cin, h, w = self.graph.shapes[node.inputs[0]]
             k = node.attrs["weight_shape"][2]
@@ -305,8 +438,33 @@ class LoweredExecutable:
         Exact-ADC nodes keep their signed (R, C) matrix; saturating
         configs get offset-encoded tile stacks plus the rank-1 column
         sums of the digital offset correction.
+
+        Streamed (multi-segment) mode instead packs one offset-encoded
+        tile stack **per (segment, tile shape)** in crossbar-pool slot
+        order — the payloads the traced segment-boundary swaps write
+        into the pool buffers.
         """
         import jax.numpy as jnp
+        if self._stream:
+            mats: Dict[str, np.ndarray] = {}
+            for name, cp in self._plans.items():
+                w = np.asarray(weights[name], np.int32)
+                if w.shape != (cp.r, cp.c):
+                    raise ValueError(f"{name}: weights {w.shape} != "
+                                     f"{(cp.r, cp.c)}")
+                mats[name] = w
+            segs: List[Dict[str, Any]] = []
+            for si in range(self._n_segments):
+                entry = {}
+                for (seg, key), layout in self._seg_layout.items():
+                    if seg != si:
+                        continue
+                    tiles = np.stack(
+                        [mats[name][r0:r1, c0:c1]
+                         for name, (r0, r1, c0, c1) in layout])
+                    entry[key] = jnp.asarray(tiles + self._ow)   # unsigned
+                segs.append(entry)
+            return {"segs": segs}
         packed: Dict[str, Any] = {}
         for name, cp in self._plans.items():
             w = np.asarray(weights[name], np.int32)
@@ -370,14 +528,33 @@ class LoweredExecutable:
         return {name: np.asarray(v) for name, v in out.items()}
 
     # -- the traced program ----------------------------------------------
+    def _swap_chain(self, segs):
+        """Trace the segment-boundary weight swaps: one pool state per
+        segment, each produced from the previous by in-place ``.at``
+        updates — the jitted program carries the hardware's
+        write-then-read dependence chain and holds at most the pool
+        (not the sum of all segments' tiles) on device."""
+        import jax.numpy as jnp
+        cur = {key: jnp.zeros(shape, jnp.int32)
+               for key, shape in self._pool_shapes.items()}
+        states = []
+        for entry in segs:
+            cur = dict(cur)
+            for key, w in entry.items():
+                cur[key] = cur[key].at[:w.shape[0]].set(w)
+            states.append(cur)
+        return states
+
     def _forward(self, packed, shifts, inputs):
+        pools = self._swap_chain(packed["segs"]) if self._stream else None
         tensors: Dict[str, Any] = dict(inputs)
         for node in self.graph.nodes:
             xs = [tensors[t] for t in node.inputs]
             if node.is_cim:
-                tensors[node.outputs[0]] = self._cim(node, xs[0],
-                                                     packed[node.name],
-                                                     shifts[node.name])
+                pw = None if self._stream else packed[node.name]
+                tensors[node.outputs[0]] = self._cim(node, xs[0], pw,
+                                                     shifts[node.name],
+                                                     pools)
             elif node.op_type == "Split":
                 for name, part in zip(node.outputs,
                                       self._split(node, xs[0])):
@@ -398,7 +575,7 @@ class LoweredExecutable:
             return x.reshape(n, -1)[:, cp.im2col_idx]
         return x[:, None, :] if cp.vector_in else x
 
-    def _cim(self, node: Node, x, pw, sh):
+    def _cim(self, node: Node, x, pw, sh, pools=None):
         import jax.numpy as jnp
         cp = self._plans[node.name]
         rows = self._rows(node, x)                     # (N, M, R)
@@ -411,6 +588,29 @@ class LoweredExecutable:
             else:
                 acc = jnp.matmul(rows, pw["w"],
                                  preferred_element_type=jnp.int32)
+        elif self._stream:
+            flat = (rows + self._ox).reshape(n * m, cp.r)
+            acc = jnp.zeros((n * m, cp.c), jnp.int32)
+            for g in cp.stream_groups:
+                rows_idx = np.stack([np.arange(r0, r1, dtype=np.int32)
+                                     for r0, r1, _, _ in g.spans])
+                xt = jnp.moveaxis(flat[:, rows_idx], 1, 0)  # (T, NM, r_len)
+                # tiles come out of *this segment's* pool state, so the
+                # dispatch depends on the traced swap chain; the offset
+                # correction's column sums are recomputed in-trace
+                w_u = pools[g.seg][g.key][g.lo:g.hi]
+                sw = w_u.sum(axis=1, keepdims=True)
+                y_u = _cim_mvm_tiles_impl(xt, w_u, self.params,
+                                          self.route.mode)
+                sx = xt.sum(-1, keepdims=True)
+                y = (y_u - self._ow * sx - self._ox * sw
+                     + g.r_len * self._ox * self._ow)
+                col_idx = np.concatenate(
+                    [np.arange(c0, c1, dtype=np.int32)
+                     for _, _, c0, c1 in g.spans])
+                acc = acc.at[:, col_idx].add(
+                    jnp.moveaxis(y, 0, 1).reshape(n * m, -1))
+            acc = acc.reshape(n, m, cp.c)
         else:
             flat = (rows + self._ox).reshape(n * m, cp.r)
             acc = jnp.zeros((n * m, cp.c), jnp.int32)
@@ -418,9 +618,8 @@ class LoweredExecutable:
                 rows_idx = np.stack([np.arange(r0, r1, dtype=np.int32)
                                      for r0, r1, _, _ in b.spans])
                 xt = jnp.moveaxis(flat[:, rows_idx], 1, 0)  # (T, NM, r_len)
-                y_u = cim_mvm_tiles(xt, pw[b.key]["w"], self.params,
-                                    use_kernel=self.use_kernel,
-                                    interpret=self.interpret)
+                y_u = _cim_mvm_tiles_impl(xt, pw[b.key]["w"], self.params,
+                                          self.route.mode)
                 sx = xt.sum(-1, keepdims=True)
                 y = (y_u - self._ow * sx - self._ox * pw[b.key]["sw"]
                      + b.r_len * self._ox * self._ow)
@@ -525,27 +724,37 @@ def clear_lower_cache() -> None:
 
 def lower(plan: SchedulePlan, program: Program,
           params: Optional[CimMvmParams] = None, *,
-          use_kernel: bool = False, interpret: bool = True,
+          mode: Optional[str] = None, stream="auto",
+          use_kernel: Optional[bool] = None,
+          interpret: Optional[bool] = None,
           cache: bool = True) -> LoweredExecutable:
     """Lower a compiled ``(plan, program)`` to a batched executable.
 
-    Cached process-wide by ``compile_key_for_plan(plan) x params`` (plus
-    the kernel-routing flags), so repeated lowerings of the same compile
-    config — calibration loops, verification sweeps, serving restarts —
-    reuse the traced executable and its jit cache.
+    The MVM execution route is a backend-registry decision (force with
+    ``mode=``; the deprecated ``use_kernel=``/``interpret=`` booleans
+    keep their historical meaning); ``stream="auto"`` enables
+    weight-update streaming exactly for multi-segment schedules.
+
+    Cached process-wide by ``compile_key_for_plan(plan) x params x
+    resolved route x streaming``, so repeated lowerings of the same
+    compile config — calibration loops, verification sweeps, serving
+    restarts — reuse the traced executable and its jit cache.
     """
     from ..core import compiler
     params = params or cim_mvm_params(plan.arch)
+    route = _resolve_executor_route(None, mode, use_kernel, interpret)
+    streamed = (max(1, len(plan.segments)) > 1) if stream == "auto" \
+        else bool(stream)
     key = None
     if cache:
-        key = (compiler.compile_key_for_plan(plan), params, use_kernel,
-               interpret)
+        key = (compiler.compile_key_for_plan(plan), params, route.mode,
+               streamed)
         hit = _LOWER_CACHE.get(key)
         if hit is not None:
             _LOWER_CACHE.move_to_end(key)
             return hit
-    exe = LoweredExecutable(plan, program, params, use_kernel=use_kernel,
-                            interpret=interpret)
+    exe = LoweredExecutable(plan, program, params, route=route,
+                            stream=streamed)
     if key is not None:
         _LOWER_CACHE[key] = exe
         while len(_LOWER_CACHE) > _LOWER_CACHE_MAX:

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# ``backend`` is the backend-capability registry: it decides, per
+# kernel and per active JAX platform, whether the compiled Pallas
+# route, the Pallas interpreter, or the XLA-compiled oracle runs.
+from . import backend  # noqa: F401

@@ -96,3 +96,73 @@ def cim_mvm_pallas(xpg: jnp.ndarray, wsg: jnp.ndarray, *, dac_bits: int,
         out_shape=jax.ShapeDtypeStruct((M, C), jnp.int32),
         interpret=interpret,
     )(xpg, wsg)
+
+
+def _tiles_kernel(xpg_ref, wsg_ref, out_ref, *, dac_bits: int,
+                  cell_bits: int, adc_max: int, n_phases: int,
+                  n_slices: int):
+    """Same body as ``_kernel`` with a leading singleton tile axis.
+
+    xpg_ref: (1, P, gb, bm, pr); wsg_ref: (1, S, gb, pr, bc);
+    out_ref: (1, bm, bc) — accumulated across the row-block grid dim.
+    """
+    k = pl.program_id(3)
+    acc = jnp.zeros(out_ref.shape[1:], jnp.int32)
+    for p in range(n_phases):
+        xg = xpg_ref[0, p]                    # (gb, bm, pr)
+        for s in range(n_slices):
+            wg = wsg_ref[0, s]                # (gb, pr, bc)
+            part = jax.lax.dot_general(
+                xg, wg,
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.int32)        # (gb, bm, bc)
+            part = jnp.minimum(part, adc_max)
+            shift = p * dac_bits + s * cell_bits
+            acc = acc + (part.sum(axis=0) << shift)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[0] = acc
+
+    @pl.when(k > 0)
+    def _accum():
+        out_ref[0] = out_ref[0] + acc
+
+
+def cim_mvm_tiles_pallas(xpg: jnp.ndarray, wsg: jnp.ndarray, *,
+                         dac_bits: int, cell_bits: int, adc_bits: int,
+                         block_m: int, block_c: int,
+                         groups_per_block: int,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Tile-batched launch: the tile axis is the *leading grid dim*.
+
+    xpg: (T, P, G, M, pr); wsg: (T, S, G, pr, C); returns (T, M, C)
+    int32.  One ``pallas_call`` covers all T crossbar tiles (instead of
+    T independent launches), with the row-block axis still innermost so
+    per-tile partial sums accumulate into the same out block.
+    Shapes must already be padded to the block grid (ops.py does this).
+    """
+    T, P, G, M, pr = xpg.shape
+    T2, S, G2, pr2, C = wsg.shape
+    assert (T, G, pr) == (T2, G2, pr2), (xpg.shape, wsg.shape)
+    assert M % block_m == 0 and C % block_c == 0 and G % groups_per_block == 0
+
+    grid = (T, M // block_m, C // block_c, G // groups_per_block)
+    kernel = functools.partial(
+        _tiles_kernel, dac_bits=dac_bits, cell_bits=cell_bits,
+        adc_max=(1 << adc_bits) - 1, n_phases=P, n_slices=S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, P, groups_per_block, block_m, pr),
+                         lambda t, i, j, k: (t, 0, k, i, 0)),
+            pl.BlockSpec((1, S, groups_per_block, pr, block_c),
+                         lambda t, i, j, k: (t, 0, k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_c),
+                               lambda t, i, j, k: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, M, C), jnp.int32),
+        interpret=interpret,
+    )(xpg, wsg)

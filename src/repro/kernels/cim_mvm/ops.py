@@ -1,23 +1,35 @@
-"""jit'd public wrapper around the CIM-MVM kernel.
+"""Public wrappers around the CIM-MVM kernel, routed by the backend
+registry.
 
-``cim_mvm``      — unsigned bit-sliced crossbar MVM (kernel or oracle).
+``cim_mvm``       — unsigned bit-sliced crossbar MVM.
+``cim_mvm_tiles`` — tile-batched MVM (the executor fast path).
 ``cim_mvm_signed`` — signed ints via offset encoding (the standard CIM
                      trick: store w + 2^(wb-1), subtract the rank-1
                      correction digitally).
 ``cim_mvm_params`` — derive the precision/row parameters from a CIMArch.
+
+Execution routing is a :mod:`repro.kernels.backend` decision, not a
+caller-threaded boolean: every entry point resolves a
+:class:`~repro.kernels.backend.KernelRoute` (``compiled`` pallas_call
+on TPU/GPU, the XLA-compiled oracle on CPU, the Pallas interpreter on
+request) unless the caller forces ``mode=``.  The pre-registry
+``use_kernel=``/``interpret=`` keyword arguments still work but are
+deprecated and emit a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import backend
 from . import ref
-from .kernel import cim_mvm_pallas
+from .kernel import cim_mvm_pallas, cim_mvm_tiles_pallas
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,19 +82,41 @@ def _block_policy(m: int, c: int, r_groups: int, pr: int):
     return block_m, block_c, gb
 
 
-@functools.partial(jax.jit, static_argnames=("params", "use_kernel",
-                                             "interpret"))
-def cim_mvm(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
-            use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
-    """Unsigned crossbar MVM: (M,R) x (R,C) -> (M,C) int32.
+def _resolve_route(kernel: str, mode: Optional[str], use_kernel,
+                   interpret, legacy_use_kernel: bool
+                   ) -> backend.KernelRoute:
+    """Per-call route resolution, honoring the deprecated boolean kwargs.
 
-    ``interpret=True`` (default) runs the Pallas kernel body in interpret
-    mode — the CPU-validation path; on TPU pass interpret=False.
-    ``use_kernel=False`` selects the pure-jnp oracle.
+    ``legacy_use_kernel`` is the kernel's pre-registry default for
+    ``use_kernel`` so the deprecated calling convention keeps its exact
+    historical meaning.
     """
-    if x_u.ndim == 1:
-        return cim_mvm(x_u[None], w_u, params, use_kernel, interpret)[0]
-    if not use_kernel:
+    if use_kernel is None and interpret is None:
+        return backend.resolve(kernel, mode=mode)
+    if mode is not None:
+        raise ValueError("pass either mode= or the deprecated "
+                         "use_kernel=/interpret= booleans, not both")
+    warnings.warn(
+        f"{kernel}: use_kernel=/interpret= are deprecated; pass "
+        "mode='compiled'|'interpret'|'xla' or let the backend registry "
+        "decide (kernels.backend.resolve)",
+        DeprecationWarning, stacklevel=3)
+    uk = legacy_use_kernel if use_kernel is None else use_kernel
+    if not uk:
+        legacy = "xla"
+    elif interpret is None or interpret:
+        legacy = "interpret"
+    else:
+        legacy = "compiled"
+    return backend.resolve(kernel, mode=legacy)
+
+
+# -- jitted implementations (static route mode) ------------------------------
+
+@functools.partial(jax.jit, static_argnames=("params", "mode"))
+def _cim_mvm_impl(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
+                  mode: str) -> jnp.ndarray:
+    if mode == "xla":
         return ref.cim_mvm_ref(
             x_u, w_u, act_bits=params.act_bits,
             weight_bits=params.weight_bits, dac_bits=params.dac_bits,
@@ -118,15 +152,71 @@ def cim_mvm(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
                          cell_bits=params.cell_bits,
                          adc_bits=params.adc_bits, block_m=block_m,
                          block_c=block_c, groups_per_block=gb,
-                         interpret=interpret)
+                         interpret=(mode == "interpret"))
     return out[:m, :c]
 
 
-@functools.partial(jax.jit, static_argnames=("params", "use_kernel",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("params", "mode"))
+def _cim_mvm_tiles_impl(x_u: jnp.ndarray, w_u: jnp.ndarray,
+                        params: CimMvmParams, mode: str) -> jnp.ndarray:
+    if mode == "xla":
+        return ref.cim_mvm_ref_tiles(
+            x_u, w_u, act_bits=params.act_bits,
+            weight_bits=params.weight_bits, dac_bits=params.dac_bits,
+            cell_bits=params.cell_bits, parallel_row=params.parallel_row,
+            adc_bits=params.adc_bits)
+
+    t, m, r = x_u.shape
+    _, _, c = w_u.shape
+    pr = min(params.parallel_row, r)
+    n_groups = math.ceil(r / pr)
+
+    x_u = _pad_to(x_u.astype(jnp.int32), 2, pr)
+    w_u = _pad_to(w_u.astype(jnp.int32), 1, pr)
+
+    xp = ref.bit_planes(x_u, params.act_bits, params.dac_bits)   # (P,T,M,R')
+    ws = ref.bit_planes(w_u, params.weight_bits, params.cell_bits)
+    P, S = xp.shape[0], ws.shape[0]
+    plane_dtype = jnp.int8 if max(params.dac_bits, params.cell_bits) <= 7 \
+        else jnp.int32
+
+    block_m, block_c, gb = _block_policy(m, c, n_groups, pr)
+    # tile-major grouped layouts: (T,P,G,M,pr) and (T,S,G,pr,C)
+    xpg = xp.reshape(P, t, m, n_groups, pr).transpose(1, 0, 3, 2, 4)
+    wsg = ws.reshape(S, t, n_groups, pr, c).transpose(1, 0, 2, 3, 4)
+    xpg = _pad_to(xpg, 3, block_m).astype(plane_dtype)
+    wsg = _pad_to(wsg, 4, block_c).astype(plane_dtype)
+
+    out = cim_mvm_tiles_pallas(xpg, wsg, dac_bits=params.dac_bits,
+                               cell_bits=params.cell_bits,
+                               adc_bits=params.adc_bits, block_m=block_m,
+                               block_c=block_c, groups_per_block=gb,
+                               interpret=(mode == "interpret"))
+    return out[:, :m, :c]
+
+
+# -- public entry points -----------------------------------------------------
+
+def cim_mvm(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
+            use_kernel: Optional[bool] = None,
+            interpret: Optional[bool] = None, *,
+            mode: Optional[str] = None) -> jnp.ndarray:
+    """Unsigned crossbar MVM: (M,R) x (R,C) -> (M,C) int32.
+
+    The execution route comes from the backend registry (``compiled``
+    pallas_call on TPU/GPU, XLA-compiled oracle on CPU) unless forced
+    with ``mode=``; ``use_kernel=``/``interpret=`` are deprecated.
+    """
+    route = _resolve_route("cim_mvm", mode, use_kernel, interpret, True)
+    if x_u.ndim == 1:
+        return _cim_mvm_impl(x_u[None], w_u, params, route.mode)[0]
+    return _cim_mvm_impl(x_u, w_u, params, route.mode)
+
+
 def cim_mvm_tiles(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
-                  use_kernel: bool = False,
-                  interpret: bool = True) -> jnp.ndarray:
+                  use_kernel: Optional[bool] = None,
+                  interpret: Optional[bool] = None, *,
+                  mode: Optional[str] = None) -> jnp.ndarray:
     """Tile-batched unsigned crossbar MVM: (T,M,R) x (T,R,C) -> (T,M,C).
 
     The batched entry point used by the trace-lowered executor
@@ -137,28 +227,19 @@ def cim_mvm_tiles(x_u: jnp.ndarray, w_u: jnp.ndarray, params: CimMvmParams,
     (tiles may be zero-padded along R in the unsigned domain — padding
     preserves per-group ADC values, see ``ref.cim_mvm_ref_tiles``).
 
-    ``use_kernel=True`` routes each tile through the Pallas kernel (a
-    static trace-time loop over T — tiles become independent kernel
-    launches inside one jitted program); the default oracle path is one
-    fused einsum over the tile batch.
+    Pallas routes run one ``pallas_call`` whose leading grid dimension
+    is the tile axis (``cim_mvm_tiles_pallas``); the ``xla`` route is
+    one fused einsum over the tile batch.
     """
-    if not use_kernel:
-        return ref.cim_mvm_ref_tiles(
-            x_u, w_u, act_bits=params.act_bits,
-            weight_bits=params.weight_bits, dac_bits=params.dac_bits,
-            cell_bits=params.cell_bits, parallel_row=params.parallel_row,
-            adc_bits=params.adc_bits)
-    return jnp.stack([
-        cim_mvm(x_u[t], w_u[t], params, use_kernel=True, interpret=interpret)
-        for t in range(x_u.shape[0])
-    ])
+    route = _resolve_route("cim_mvm_tiles", mode, use_kernel, interpret,
+                           False)
+    return _cim_mvm_tiles_impl(x_u, w_u, params, route.mode)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "use_kernel",
-                                             "interpret"))
 def cim_mvm_signed(x_i: jnp.ndarray, w_i: jnp.ndarray, params: CimMvmParams,
-                   use_kernel: bool = True,
-                   interpret: bool = True) -> jnp.ndarray:
+                   use_kernel: Optional[bool] = None,
+                   interpret: Optional[bool] = None, *,
+                   mode: Optional[str] = None) -> jnp.ndarray:
     """Signed MVM via offset encoding.
 
     x in [-2^(ab-1), 2^(ab-1)), w likewise; stored as x+ox / w+ow
@@ -166,6 +247,14 @@ def cim_mvm_signed(x_i: jnp.ndarray, w_i: jnp.ndarray, params: CimMvmParams,
     when the ADC does not saturate — chips budget the ADC for the
     offset-encoded range, and so do our params presets).
     """
+    route = _resolve_route("cim_mvm_signed", mode, use_kernel, interpret,
+                           True)
+    return _cim_mvm_signed_impl(x_i, w_i, params, route.mode)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "mode"))
+def _cim_mvm_signed_impl(x_i: jnp.ndarray, w_i: jnp.ndarray,
+                         params: CimMvmParams, mode: str) -> jnp.ndarray:
     squeeze = x_i.ndim == 1
     if squeeze:
         x_i = x_i[None]
@@ -173,7 +262,7 @@ def cim_mvm_signed(x_i: jnp.ndarray, w_i: jnp.ndarray, params: CimMvmParams,
     ow = 1 << (params.weight_bits - 1)
     x_u = (x_i.astype(jnp.int32) + ox)
     w_u = (w_i.astype(jnp.int32) + ow)
-    y_u = cim_mvm(x_u, w_u, params, use_kernel, interpret)
+    y_u = _cim_mvm_impl(x_u, w_u, params, mode)
     r = x_i.shape[-1]
     sx = x_u.sum(axis=-1, keepdims=True)          # (M,1)
     sw = w_u.sum(axis=0, keepdims=True)           # (1,C)

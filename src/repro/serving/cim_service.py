@@ -90,6 +90,13 @@ class CimBatchService:
                                             self.weights, self.shifts,
                                             params=self.params)
 
+    @property
+    def executor_stats(self):
+        """The lowered executable's ``ExecutorStats`` (segments, streamed
+        weight updates, resolved kernel route), or ``None`` when the
+        service degraded to the op-by-op interpreter."""
+        return self._exe.stats if self.use_executor else None
+
     def serve(self, requests: List[CimRequest]) -> List[CimRequest]:
         """Serve ``requests`` in arrival order, ``max_batch`` at a time.
 

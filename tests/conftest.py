@@ -1,4 +1,21 @@
 import sys
 from pathlib import Path
 
+import pytest
+
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip ``accel``-marked tests unless the backend registry says
+    the active platform can lower a compiled pallas_call for real."""
+    from repro.kernels import backend
+
+    if backend.supports("cim_mvm", "compiled"):
+        return
+    skip = pytest.mark.skip(
+        reason=f"no compiled pallas_call route on "
+               f"{backend.detect_platform()!r} (accel-only test)")
+    for item in items:
+        if "accel" in item.keywords:
+            item.add_marker(skip)

@@ -1,6 +1,7 @@
 """The docs stay true: every fenced ``python`` block in the guides
-(docs/DSE.md, docs/SERVING.md, docs/FLEET.md) executes, and every
-relative markdown link in README.md / docs/ resolves.
+(docs/DSE.md, docs/SERVING.md, docs/FLEET.md, docs/KERNELS.md)
+executes, and every relative markdown link in README.md / docs/
+resolves.
 
 Blocks run in file order inside one shared namespace (like a reader
 pasting them into one session), with the compile cache pointed at a
@@ -67,6 +68,21 @@ def test_fleet_doc_snippets_execute(tmp_path, monkeypatch):
     assert ns["cluster"].migrations >= 1          # drift section replans
     assert len(ns["served"]) == len(ns["accepted"])   # ladder never drops
     assert len(ns["trace"]["traceEvents"]) > 0
+
+
+def test_kernels_doc_snippets_execute(tmp_path, monkeypatch):
+    import tempfile
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", str(tmp_path / "cache"))
+    monkeypatch.setattr(tempfile, "tempdir", str(tmp_path))
+    blocks = python_blocks(REPO / "docs" / "KERNELS.md")
+    assert len(blocks) >= 5, "docs/KERNELS.md lost its executable snippets"
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        code = compile(block, f"docs/KERNELS.md[python block {i}]", "exec")
+        exec(code, ns)   # noqa: S102 — executing our own documentation
+    # the guide's narrative claims, re-checked here explicitly
+    assert ns["route"].mode in ("compiled", "interpret", "xla")
+    assert ns["exe"].stats.streamed and ns["exe"].stats.swaps > 0
 
 
 def test_architecture_doc_mentions_every_package():

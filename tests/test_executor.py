@@ -58,7 +58,13 @@ def test_executor_matches_interpreter(wl, mode):
     for t in g.outputs:
         np.testing.assert_array_equal(sim_out[t], exe_out[t])
     assert exe.stats.cim_reads > 0
-    assert exe.stats.matmul_nodes == exe.stats.cim_nodes  # exact ADC
+    if exe.stats.streamed:
+        # multi-segment plan: weight-update streaming rides the tile
+        # path (the pool models crossbar residency), still bit-exact
+        assert exe.stats.segments > 1 and exe.stats.swaps > 0
+        assert exe.stats.matmul_nodes == 0
+    else:
+        assert exe.stats.matmul_nodes == exe.stats.cim_nodes  # exact ADC
 
 
 @pytest.mark.parametrize("wl", ["tiny_mlp", "tiny_cnn"])

@@ -29,10 +29,27 @@ def test_kernel_matches_oracle(shape, params):
     m, r, c = shape
     x = RNG.integers(0, 2 ** params.act_bits, (m, r)).astype(np.int32)
     w = RNG.integers(0, 2 ** params.weight_bits, (r, c)).astype(np.int32)
-    y_kernel = np.asarray(cim_mvm(jnp.asarray(x), jnp.asarray(w), params))
+    y_kernel = np.asarray(cim_mvm(jnp.asarray(x), jnp.asarray(w), params,
+                                  mode="interpret"))
     y_oracle = np.asarray(cim_mvm(jnp.asarray(x), jnp.asarray(w), params,
-                                  use_kernel=False))
+                                  mode="xla"))
     np.testing.assert_array_equal(y_kernel, y_oracle)
+
+
+def test_deprecated_boolean_kwargs_warn_and_match():
+    """use_kernel=/interpret= still work, warn, and keep their meaning."""
+    p = CimMvmParams(8, 8, 1, 2, 8, 8)
+    x = jnp.asarray(RNG.integers(0, 256, (5, 40)).astype(np.int32))
+    w = jnp.asarray(RNG.integers(0, 256, (40, 7)).astype(np.int32))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        y_legacy = np.asarray(cim_mvm(x, w, p, use_kernel=False))
+    np.testing.assert_array_equal(y_legacy,
+                                  np.asarray(cim_mvm(x, w, p, mode="xla")))
+    with pytest.warns(DeprecationWarning):
+        y_interp = np.asarray(cim_mvm(x, w, p, interpret=True))
+    np.testing.assert_array_equal(y_interp, y_legacy)
+    with pytest.raises(ValueError, match="not both"):
+        cim_mvm(x, w, p, use_kernel=False, mode="xla")
 
 
 @pytest.mark.parametrize("params", [p for p in PARAMS if p.exact])

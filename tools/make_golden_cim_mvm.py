@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Regenerate the committed cim_mvm golden-vector fixtures.
+
+Each fixture in ``tests/golden/cim_mvm/`` is one .npz holding the
+inputs, the crossbar params and the expected int32 output of one kernel
+entry point.  Expectations come from the pure-jnp oracle
+(``ref.cim_mvm_ref``) — the semantic ground truth — and are
+cross-checked against the Pallas interpreter before being written, so a
+fixture can only ever encode agreed-upon semantics.
+
+The point of committing them: the conformance suite replays these on
+*any* platform (TPU/GPU compiled routes included) without needing
+hypothesis or a tracked RNG — a bit-for-bit contract across backends
+and releases.  Inputs are crc32-seeded from the case name, mirroring
+``cimsim.functional.make_weights`` (stable across processes and
+PYTHONHASHSEED).
+
+Usage:  PYTHONPATH=src python tools/make_golden_cim_mvm.py
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import zlib
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax.numpy as jnp                                   # noqa: E402
+
+from repro.kernels.cim_mvm import CimMvmParams            # noqa: E402
+from repro.kernels.cim_mvm import ops                     # noqa: E402
+from repro.kernels.cim_mvm import ref                     # noqa: E402
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "tests" / \
+    "golden" / "cim_mvm"
+
+#: (name, kind, params, shape) — shape is (M, R, C) for cim_mvm /
+#: cim_mvm_signed and (T, M, R, C) for cim_mvm_tiles.  Params cover the
+#: preset families plus a hard-saturating ADC.
+CASES = [
+    ("mvm_isaac", "cim_mvm", CimMvmParams(8, 8, 1, 2, 8, 8), (5, 40, 9)),
+    ("mvm_puma", "cim_mvm", CimMvmParams(8, 8, 8, 2, 128, 8), (3, 130, 17)),
+    ("mvm_saturating", "cim_mvm", CimMvmParams(8, 8, 8, 8, 128, 4),
+     (4, 128, 8)),
+    ("tiles_isaac", "cim_mvm_tiles", CimMvmParams(8, 8, 1, 2, 8, 8),
+     (3, 6, 20, 12)),
+    ("tiles_saturating", "cim_mvm_tiles", CimMvmParams(8, 8, 1, 2, 8, 4),
+     (2, 4, 16, 8)),
+    ("signed_wide_adc", "cim_mvm_signed", CimMvmParams(8, 8, 1, 2, 8, 16),
+     (7, 50, 11)),
+]
+
+
+def _rng(name: str, tag: str) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(f"{name}\x00{tag}".encode()))
+
+
+def _inputs(name: str, kind: str, params: CimMvmParams, shape):
+    if kind == "cim_mvm_tiles":
+        t, m, r, c = shape
+        x = _rng(name, "x").integers(0, 1 << params.act_bits, (t, m, r))
+        w = _rng(name, "w").integers(0, 1 << params.weight_bits, (t, r, c))
+    elif kind == "cim_mvm_signed":
+        m, r, c = shape
+        half_a, half_w = 1 << (params.act_bits - 1), \
+            1 << (params.weight_bits - 1)
+        x = _rng(name, "x").integers(-half_a, half_a, (m, r))
+        w = _rng(name, "w").integers(-half_w, half_w, (r, c))
+    else:
+        m, r, c = shape
+        x = _rng(name, "x").integers(0, 1 << params.act_bits, (m, r))
+        w = _rng(name, "w").integers(0, 1 << params.weight_bits, (r, c))
+    return x.astype(np.int32), w.astype(np.int32)
+
+
+def _expected(kind: str, x: np.ndarray, w: np.ndarray,
+              params: CimMvmParams) -> np.ndarray:
+    kw = dict(act_bits=params.act_bits, weight_bits=params.weight_bits,
+              dac_bits=params.dac_bits, cell_bits=params.cell_bits,
+              parallel_row=params.parallel_row, adc_bits=params.adc_bits)
+    if kind == "cim_mvm_tiles":
+        return np.asarray(ref.cim_mvm_ref_tiles(jnp.asarray(x),
+                                                jnp.asarray(w), **kw))
+    if kind == "cim_mvm_signed":
+        ox, ow = 1 << (params.act_bits - 1), 1 << (params.weight_bits - 1)
+        y_u = np.asarray(ref.cim_mvm_ref(jnp.asarray(x + ox),
+                                         jnp.asarray(w + ow), **kw),
+                         np.int64)
+        sx = (x.astype(np.int64) + ox).sum(axis=-1, keepdims=True)
+        sw = (w.astype(np.int64) + ow).sum(axis=0, keepdims=True)
+        return (y_u - ow * sx - ox * sw
+                + x.shape[-1] * ox * ow).astype(np.int32)
+    return np.asarray(ref.cim_mvm_ref(jnp.asarray(x), jnp.asarray(w), **kw))
+
+
+def main() -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    entry = {"cim_mvm": ops.cim_mvm, "cim_mvm_tiles": ops.cim_mvm_tiles,
+             "cim_mvm_signed": ops.cim_mvm_signed}
+    for name, kind, params, shape in CASES:
+        x, w = _inputs(name, kind, params, shape)
+        y = _expected(kind, x, w, params)
+        # cross-check: the Pallas interpreter must agree before we
+        # enshrine the expectation
+        y_interp = np.asarray(entry[kind](jnp.asarray(x), jnp.asarray(w),
+                                          params, mode="interpret"))
+        np.testing.assert_array_equal(y, y_interp)
+        path = OUT_DIR / f"{name}.npz"
+        np.savez_compressed(
+            path, kind=np.array(kind), x=x, w=w, y=y,
+            params=np.array([params.act_bits, params.weight_bits,
+                             params.dac_bits, params.cell_bits,
+                             params.parallel_row, params.adc_bits],
+                            np.int32))
+        print(f"wrote {path.relative_to(OUT_DIR.parent.parent.parent)} "
+              f"({path.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()
