@@ -10,14 +10,21 @@ Reports, for a compact cross-tier space on the Table-3 baseline:
   * a multi-workload campaign pass through the shared job queue;
   * batched proxy rung throughput: the scalar per-point analytic loop
     vs one ``dse.proxy_vec`` structure-of-arrays pass over a large
-    cross-tier space, asserted bit-equal point by point.
+    cross-tier space, asserted bit-equal point by point;
+  * adaptive vs exhaustive successive halving on the same large space:
+    the seeded ask/tell searcher must match halving's best cost while
+    paying >= 5x fewer full-fidelity compiles (non-smoke);
+  * the shared compile farm: two adaptive campaigns run concurrently
+    against one content-addressed store, asserted to report nonzero
+    cross-campaign (``foreign_hits``) reuse.
 
-The proxy section emits ``BENCH_dse.json`` next to this script
-(override the path with ``REPRO_BENCH_DSE_JSON``; under
+The proxy and adaptive sections emit ``BENCH_dse.json`` next to this
+script (override the path with ``REPRO_BENCH_DSE_JSON``; under
 ``REPRO_BENCH_SMOKE=1`` nothing is written unless the override is set)
-so future PRs can regress-check the rung's perf trajectory: the batched
-pass must stay >= 50x faster than the scalar loop on a >= 1000-point
-ResNet-18 space while ranking points identically.
+so future PRs can regress-check the perf trajectory: the batched pass
+must stay >= 50x faster than the scalar loop on a >= 1000-point
+ResNet-18 space while ranking points identically, and the adaptive row
+must keep ``best_le_halving`` true at >= 5x full-compile reduction.
 """
 from __future__ import annotations
 
@@ -30,14 +37,24 @@ from pathlib import Path
 from cim_common import SMOKE, get_arch, get_workload
 from repro.core import compiler
 from repro.dse import (CompileCache, DesignSpace, NodeTensor,
-                       pareto_frontier, proxy_metrics_batch, run_campaign,
+                       adaptive_search, pareto_frontier,
+                       proxy_metrics_batch, run_campaign,
                        successive_halving, sweep)
 
 SMOKE_NET = "tiny_cnn"
 
+#: searcher knobs for the large-space cell — also recorded in the JSON
+#: row so the committed numbers are reproducible verbatim
+ADAPTIVE_KNOBS = dict(seed=0, batch=512, max_rounds=16, patience=3,
+                      gamma=0.2, explore=0.1, prefix_keep=128,
+                      full_keep=64)
+SMOKE_KNOBS = dict(seed=0, batch=32, max_rounds=8, patience=2,
+                   gamma=0.25, explore=0.1, prefix_keep=12, full_keep=4)
 
-def proxy_rows():
-    """Batched vs scalar proxy rung on a large cross-tier space."""
+
+def _large_space():
+    """The big cross-tier benchmark space (11664-point ResNet-18 space
+    non-smoke; a small toy space under ``REPRO_BENCH_SMOKE``)."""
     if SMOKE:
         graph, arch = get_workload(SMOKE_NET), get_arch("toy")
         space = DesignSpace(arch, arch_axes={
@@ -53,6 +70,20 @@ def proxy_rows():
             "xb.dac_bits": [1, 2, 4],
             "core.xb_number": [(2, 2), (2, 4), (4, 4)],
             "chip.core_number": [(8, 8), (16, 16), (32, 32)]})
+    return graph, arch, space
+
+
+def _bench_json_path():
+    path = os.environ.get("REPRO_BENCH_DSE_JSON")
+    if path or not SMOKE:
+        return Path(path) if path else \
+            Path(__file__).resolve().parent / "BENCH_dse.json"
+    return None
+
+
+def proxy_rows():
+    """Batched vs scalar proxy rung on a large cross-tier space."""
+    graph, arch, space = _large_space()
     points = space.points()
 
     # Measure the scalar rung (the per-job loop the pre-batching runner
@@ -99,7 +130,7 @@ def proxy_rows():
     assert same_best, "batched rung would promote a different best point"
 
     payload = {
-        "schema": 1,
+        "schema": 2,
         "smoke": SMOKE,
         "workload": graph.name,
         "arch": arch.name,
@@ -112,10 +143,12 @@ def proxy_rows():
         "bit_exact": mismatches == 0,
         "best_matches_scalar": bool(same_best),
     }
-    path = os.environ.get("REPRO_BENCH_DSE_JSON")
-    if path or not SMOKE:
-        path = Path(path) if path else \
-            Path(__file__).resolve().parent / "BENCH_dse.json"
+    path = _bench_json_path()
+    if path is not None:
+        if path.exists():    # keep the adaptive row a prior section wrote
+            prior = json.loads(path.read_text(encoding="utf-8"))
+            if "adaptive" in prior:
+                payload["adaptive"] = prior["adaptive"]
         path.write_text(json.dumps(payload, indent=2) + "\n",
                         encoding="utf-8")
 
@@ -130,6 +163,119 @@ def proxy_rows():
         ("dse_proxy_bit_exact", 1.0, "asserted point by point"),
         ("dse_proxy_best_matches_scalar", float(same_best),
          "same promotion decision as the scalar rung"),
+    ]
+
+
+def adaptive_rows():
+    """Adaptive ask/tell search vs exhaustive halving on the big space,
+    plus two campaigns drawing from one shared compile store.
+
+    Non-smoke acceptance (committed to ``BENCH_dse.json``): the adaptive
+    searcher's best point costs no more than exhaustive successive
+    halving's while issuing >= 5x fewer full-fidelity compiles, and the
+    two store-sharing campaigns report nonzero cross-campaign hits.
+    """
+    import threading
+
+    graph, arch, space = _large_space()
+    points = space.points()
+    knobs = SMOKE_KNOBS if SMOKE else ADAPTIVE_KNOBS
+
+    # exhaustive successive halving: the fixed-grid reference
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        sr = successive_halving(graph, space,
+                                cache=CompileCache(d, memory=False))
+        halving_s = time.perf_counter() - t0
+
+    # the learned searcher, cold store
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        ar = adaptive_search(graph, space,
+                             cache=CompileCache(d, memory=False), **knobs)
+        adaptive_s = time.perf_counter() - t0
+
+    assert ar.best is not None and sr.best is not None
+    obj = "latency_cycles"
+    best_le = ar.best.metrics[obj] <= sr.best.metrics[obj]
+    reduction = sr.full_evals / max(ar.full_evals, 1)
+    if not SMOKE:
+        assert best_le, (
+            f"adaptive best {ar.best.metrics[obj]} worse than halving "
+            f"{sr.best.metrics[obj]}")
+        assert reduction >= 5.0, \
+            f"only {reduction:.1f}x fewer full compiles"
+
+    # two campaigns, one artifact pool: campaign B starts once A has
+    # published its first entry, so their execution windows overlap and
+    # B's lookups land on entries A paid for (and vice versa once B
+    # overtakes) — the cross-campaign reuse the shared store exists for
+    with tempfile.TemporaryDirectory() as d:
+        store = Path(d) / "store"
+        wl = {graph.name: graph}
+        camps = {}
+
+        def campaign(tag, wait_for_entry):
+            cache = CompileCache(store, owner=tag, memory=False)
+            if wait_for_entry:
+                deadline = time.time() + 600
+                while not any(cache._base.glob("*/*.pkl")):
+                    if time.time() > deadline:
+                        break
+                    time.sleep(0.01)
+            camps[tag] = run_campaign(wl, space, mode="adaptive",
+                                      cache=cache, adaptive=knobs)
+            cache.publish_stats()
+
+        tb = threading.Thread(target=campaign, args=("campB", True))
+        tb.start()
+        campaign("campA", False)
+        tb.join()
+        cross_hits = sum(c.cache_stats["foreign_hits"]
+                         for c in camps.values())
+    assert cross_hits > 0, "store sharing produced no cross-campaign hits"
+    for c in camps.values():    # both campaigns still find a winner
+        assert all(w.best is not None for w in c.workloads.values())
+
+    row = {
+        "workload": graph.name,
+        "arch": arch.name,
+        "points": len(points),
+        "knobs": {k: v for k, v in knobs.items()},
+        "proxy_evals": ar.proxy_evals,
+        "ask_rounds": ar.ask_rounds,
+        "prefix_evals": ar.prefix_evals,
+        "full_evals": ar.full_evals,
+        "best_cost": ar.best.metrics[obj],
+        "best_point": ar.best.point.label(),
+        "halving_full_evals": sr.full_evals,
+        "halving_best_cost": sr.best.metrics[obj],
+        "best_le_halving": bool(best_le),
+        "full_eval_reduction_x": round(reduction, 1),
+        "adaptive_s": round(adaptive_s, 2),
+        "halving_s": round(halving_s, 2),
+        "cross_campaign_hits": int(cross_hits),
+    }
+    path = _bench_json_path()
+    if path is not None:
+        payload = (json.loads(path.read_text(encoding="utf-8"))
+                   if path.exists() else {"schema": 2, "smoke": SMOKE})
+        payload["adaptive"] = row
+        path.write_text(json.dumps(payload, indent=2) + "\n",
+                        encoding="utf-8")
+
+    return [
+        ("dse_adaptive_proxy_evals", float(ar.proxy_evals),
+         f"of {len(points)} points, {ar.ask_rounds} ask rounds"),
+        ("dse_adaptive_full_evals", float(ar.full_evals),
+         f"halving paid {sr.full_evals}"),
+        ("dse_adaptive_full_eval_reduction_x", reduction,
+         "acceptance: >= 5x non-smoke"),
+        ("dse_adaptive_best_le_halving", float(best_le),
+         "1 = adaptive best cost <= halving best cost"),
+        ("dse_adaptive_s", adaptive_s, f"halving: {halving_s:.1f}s"),
+        ("dse_shared_store_cross_hits", float(cross_hits),
+         "entries one campaign compiled, the other consumed"),
     ]
 
 
@@ -208,6 +354,7 @@ def rows():
                 f"exhaustive would pay {camp.exhaustive_evals}"))
     out.append(("dse_campaign_s", camp_s, "single shared job queue"))
     out.extend(proxy_rows())
+    out.extend(adaptive_rows())
     return out
 
 

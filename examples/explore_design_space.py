@@ -8,7 +8,9 @@ compile → full compile), then report per-workload Pareto frontiers and
 the cross-workload robust points.  On one comparison workload the script
 also runs exhaustive enumeration and demonstrates that halving pays a
 small fraction of the full-fidelity compiles (>= 5x fewer) while
-returning the same best-latency configuration.
+returning the same best-latency configuration, then runs the seeded
+adaptive (ask/tell) searcher on the same space and prints its
+scorecard next to the campaign's.
 
 ``--mode sweep`` keeps the original single-workload exhaustive sweep
 with the warm-cache rerun demonstration.
@@ -29,7 +31,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core.abstraction import PRESETS, get_arch          # noqa: E402
 from repro.dse import (CompileCache, DesignSpace,             # noqa: E402
-                       pareto_frontier, run_campaign, successive_halving)
+                       adaptive_search, campaign_scorecard, pareto_frontier,
+                       run_campaign, search_scorecard, successive_halving)
 from repro.dse.cache import default_cache_dir                 # noqa: E402
 from repro.dse.runner import sweep                            # noqa: E402
 from repro.workloads import WORKLOADS, get_workload           # noqa: E402
@@ -79,6 +82,8 @@ def run_campaign_demo(args, space, cache) -> int:
     camp_s = time.perf_counter() - t0
     print(f"\ncampaign finished in {camp_s:.2f}s")
     print(camp.summary())
+    print()
+    print(campaign_scorecard(camp).to_markdown())
     for name, w in camp.workloads.items():
         print_frontier(w.frontier, f"{name} Pareto frontier")
 
@@ -109,6 +114,23 @@ def run_campaign_demo(args, space, cache) -> int:
     print("  halving returns the same best point: OK")
     assert reduction >= 5, \
         f"halving should compile >=5x fewer points (got {reduction:.1f}x)"
+
+    # --- adaptive searcher on the same workload --------------------------
+    print(f"\n=== adaptive (learned, budgeted) search on {ref} ===")
+    t0 = time.perf_counter()
+    asr = adaptive_search(graph, space, cache=cache, workers=args.workers,
+                          seed=args.seed, batch=16,
+                          prefix_keep=max(8, len(exhaustive) // 3),
+                          full_keep=max(4, len(exhaustive) // 8))
+    ad_s = time.perf_counter() - t0
+    print(search_scorecard(asr, name=ref).to_markdown())
+    gap = (asr.best.metrics["latency_cycles"]
+           / best_ex.metrics["latency_cycles"] - 1.0)
+    print(f"  adaptive: {asr.full_evals} full compiles in {ad_s:.2f}s; "
+          f"best within {gap:.1%} of the exhaustive best")
+    assert asr.best is not None, "adaptive found no feasible point"
+    assert asr.full_evals * 3 <= len(exhaustive), \
+        "adaptive should compile at most a third of the space at full fidelity"
     print(f"cache entries on disk: {cache.stats()['disk_entries']}")
     return 0
 
@@ -170,6 +192,8 @@ def main(argv=None) -> int:
                     help="process-pool width for the job queue")
     ap.add_argument("--eta", type=int, default=3,
                     help="successive-halving promotion factor")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="adaptive-search RNG seed (pins the trajectory)")
     ap.add_argument("--robust-tol", type=float, default=0.10,
                     help="robust-point tolerance (relative to per-workload "
                          "best)")

@@ -17,18 +17,26 @@ turns the one-shot compiler into a search service:
                    one vectorized pass, bit-exact vs the scalar oracle;
   * ``search``   — multi-fidelity successive halving (batched proxy
                    metrics → graph-prefix compiles → full compiles);
+  * ``adaptive`` — budgeted ask/tell searcher (TPE-style density model
+                   over the categorical + arch axes) batched for the
+                   vectorized proxy, promoting a model-chosen shortlist
+                   up the same fidelity ladder;
   * ``campaign`` — multi-workload campaigns over one queue + cache,
                    with per-workload frontiers and robust-point summary;
-  * ``pareto``   — Pareto frontier over (latency, peak power, crossbars).
+  * ``pareto``   — Pareto frontier over (latency, peak power, crossbars);
+  * ``report``   — lm-eval-harness-style scorecards for campaigns and
+                   searches (markdown / JSON).
 
 See docs/DSE.md for the guide.
 """
-from .cache import CompileCache, default_cache_dir
+from .adaptive import AdaptiveResult, AdaptiveSearch, adaptive_search
+from .cache import CompileCache, default_cache_dir, shared_stats
 from .campaign import (CampaignResult, RobustPoint, WorkloadOutcome,
                        robust_points, run_campaign)
 from .pareto import DEFAULT_OBJECTIVES, dominates, pareto_frontier
 from .proxy_vec import (BatchedProxyMetrics, NodeTensor,
                         proxy_metrics_batch)
+from .report import Scorecard, campaign_scorecard, search_scorecard
 from .runner import (EvalJob, SweepResult, evaluate_point, run_jobs,
                      sweep)
 from .search import (DEFAULT_LADDER, HalvingSearch, Rung, RungLog,
@@ -36,11 +44,13 @@ from .search import (DEFAULT_LADDER, HalvingSearch, Rung, RungLog,
 from .space import DesignPoint, DesignSpace, apply_arch_overrides
 
 __all__ = [
-    "CompileCache", "default_cache_dir",
+    "AdaptiveResult", "AdaptiveSearch", "adaptive_search",
+    "CompileCache", "default_cache_dir", "shared_stats",
     "CampaignResult", "RobustPoint", "WorkloadOutcome",
     "robust_points", "run_campaign",
     "DEFAULT_OBJECTIVES", "dominates", "pareto_frontier",
     "BatchedProxyMetrics", "NodeTensor", "proxy_metrics_batch",
+    "Scorecard", "campaign_scorecard", "search_scorecard",
     "EvalJob", "SweepResult", "evaluate_point", "run_jobs", "sweep",
     "DEFAULT_LADDER", "HalvingSearch", "Rung", "RungLog",
     "SearchResult", "successive_halving",

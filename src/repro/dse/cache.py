@@ -1,39 +1,62 @@
-"""Content-addressed compile cache.
+"""Content-addressed compile cache — a shared artifact store.
 
 Entries are keyed by ``core.compiler.compile_key`` — a SHA-256 over the
 graph structure, the full Abs-arch description and every scheduling knob
 — so a key can only ever map to one compilation output.  Each entry is
-two files under ``<root>/v<schema>/<key[:2]>/``:
+three files under ``<root>/v<schema>/<key[:2]>/``:
 
   * ``<key>.pkl``   — the pickled ``CompileResult`` (plan + program);
   * ``<key>.json``  — the small ``PerfReport.metrics()`` bundle, so sweep
-    re-runs score cached points without unpickling multi-MB plans.
+    re-runs score cached points without unpickling multi-MB plans;
+  * ``<key>.src``   — the short ``owner`` token of the handle that
+    published the entry, so a hit can be attributed to the campaign (or
+    fleet) that paid the compile.
 
-Writes are atomic (tempfile + ``os.replace``), which makes the cache safe
-under the sweep runner's process pool.  Invalidation is by construction:
-changing the graph, the arch, any knob, or ``COMPILE_KEY_SCHEMA`` (bumped
-when compiler passes change behaviour) changes the key; stale entries are
-simply never addressed again.  ``clear()`` removes the directory tree.
+Writes are atomic (tempfile + ``os.replace``), which makes *publication*
+safe under any number of concurrent writers — sweep-runner process
+pools, simultaneous campaigns, serving fleets warm-loading from the same
+root.  Invalidation is by construction: changing the graph, the arch,
+any knob, or ``COMPILE_KEY_SCHEMA`` (bumped when compiler passes change
+behaviour) changes the key; stale entries are simply never addressed
+again.  ``clear()`` removes the directory tree.
 
 Disk growth is bounded when ``max_bytes`` is set: after each ``put`` the
 current schema's entries are LRU-evicted by access time until the total
-size fits (the entry just written is never evicted).  Long-running
-fleets and campaign farms set the knob; the default stays unbounded so
-sweep reproducibility never silently loses entries.
+size fits (the entry just written is never evicted).  Eviction holds an
+exclusive **lock file** (``<root>/v<schema>/.lock``, ``flock`` where
+available, an ``O_EXCL`` spin lock elsewhere), so two handles — or two
+processes — capping the same store serialize their scans instead of
+deleting each other's in-flight entries; ``evict_grace_s`` additionally
+exempts entries younger than the grace window.  Long-running fleets and
+campaign farms set the cap; the default stays unbounded so sweep
+reproducibility never silently loses entries.
+
+Cross-process accounting: every handle carries an ``owner`` token; disk
+hits on entries another handle published count as ``foreign_hits``
+(the cross-campaign reuse the shared store exists for), and
+``publish_stats()`` / ``shared_stats()`` aggregate per-handle counter
+bundles across processes through the store itself.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import pickle
 import tempfile
+import time
+import uuid
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict, Iterator, Optional
 
 from ..core.compiler import COMPILE_KEY_SCHEMA, CompileResult
 
 #: environment override for the on-disk cache location
 CACHE_DIR_ENV = "REPRO_COMPILE_CACHE_DIR"
+
+#: spin-lock parameters for the no-``fcntl`` fallback (seconds)
+_LOCK_POLL_S = 0.005
+_LOCK_STALE_S = 30.0
 
 
 def default_cache_dir() -> Path:
@@ -50,24 +73,39 @@ class CompileCache:
     The memory layer serves repeated compiles inside one process without
     touching disk; ``memory=False`` disables it (useful for measuring the
     disk path, and for workers that should not grow resident memory).
+
+    ``owner`` names this handle in the shared store (default: a random
+    token per handle).  Two campaigns sharing one root pass distinct
+    owners (or accept the default) and read ``stats()["foreign_hits"]``
+    to see how many artifacts the *other* campaign paid for.
     """
 
     def __init__(self, root=None, memory: bool = True,
-                 max_bytes: Optional[int] = None):
+                 max_bytes: Optional[int] = None,
+                 owner: Optional[str] = None,
+                 evict_grace_s: float = 0.0):
         self.root = Path(root) if root is not None else default_cache_dir()
         self._mem: Optional[Dict[str, CompileResult]] = {} if memory else None
         self._mem_metrics: Dict[str, Dict] = {}
         self.max_bytes = max_bytes   # on-disk size cap (None: unbounded)
+        self.evict_grace_s = float(evict_grace_s)
         self._disk_total: Optional[int] = None   # running size estimate
         self._access: Dict[str, float] = {}      # per-key last hit (any layer)
+        self.owner = owner if owner else uuid.uuid4().hex[:12]
+        self._origin_seen: set = set()  # keys whose disk origin was counted
         self.hits = 0           # full CompileResult hits (get)
         self.metrics_hits = 0   # metric-only hits (get_metrics, no unpickle)
         self.misses = 0         # lookups of either kind that found nothing
         self.evictions = 0      # entries removed by the size cap
+        self.foreign_hits = 0   # disk hits on entries another owner wrote
 
     # -- paths ------------------------------------------------------------
+    @property
+    def _base(self) -> Path:
+        return self.root / f"v{COMPILE_KEY_SCHEMA}"
+
     def _dir(self, key: str) -> Path:
-        return self.root / f"v{COMPILE_KEY_SCHEMA}" / key[:2]
+        return self._base / key[:2]
 
     def _pkl(self, key: str) -> Path:
         return self._dir(key) / f"{key}.pkl"
@@ -75,14 +113,81 @@ class CompileCache:
     def _json(self, key: str) -> Path:
         return self._dir(key) / f"{key}.json"
 
+    def _src(self, key: str) -> Path:
+        return self._dir(key) / f"{key}.src"
+
+    # -- locking ----------------------------------------------------------
+    @contextlib.contextmanager
+    def lock(self) -> Iterator[None]:
+        """Exclusive store-wide lock (blocks until acquired).
+
+        Guards multi-file maintenance — eviction uses it internally.
+        Prefer ``flock`` (kernel-released on process death); fall back to
+        an ``O_EXCL`` spin lock with stale-break where ``fcntl`` is
+        missing.  Publication (``put``) does *not* take the lock: atomic
+        renames are already safe under concurrency.
+        """
+        self._base.mkdir(parents=True, exist_ok=True)
+        try:
+            import fcntl
+        except ImportError:
+            fcntl = None
+        if fcntl is not None:
+            with open(self._base / ".lock", "a+b") as f:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                try:
+                    yield
+                finally:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+            return
+        # portable fallback: spin on an exclusive-create marker
+        marker = self._base / ".lock.excl"
+        while True:
+            try:
+                fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                os.close(fd)
+                break
+            except FileExistsError:
+                try:   # break locks abandoned by a dead process
+                    if time.time() - marker.stat().st_mtime > _LOCK_STALE_S:
+                        marker.unlink(missing_ok=True)
+                        continue
+                except OSError:
+                    pass
+                time.sleep(_LOCK_POLL_S)
+        try:
+            yield
+        finally:
+            try:
+                marker.unlink()
+            except OSError:
+                pass
+
     # -- lookups ----------------------------------------------------------
     def _touch(self, key: str) -> None:
         """Record a hit for the size cap's LRU: memory-layer hits never
         reach the files, so disk atimes alone would rank the *hottest*
         entries oldest — this per-handle access map keeps them safe."""
         if self.max_bytes is not None:
-            import time
             self._access[key] = time.time()
+
+    def _count_origin(self, key: str) -> None:
+        """Attribute a *disk* hit to the handle that published the entry.
+
+        Counted once per key per handle (the first disk load; memory-layer
+        re-hits are this handle's own amortization, not cross-handle
+        reuse).  Entries without a ``.src`` sidecar (pre-upgrade stores)
+        stay unattributed.
+        """
+        if key in self._origin_seen:
+            return
+        self._origin_seen.add(key)
+        try:
+            writer = self._src(key).read_text(encoding="utf-8").strip()
+        except OSError:
+            return
+        if writer and writer != self.owner:
+            self.foreign_hits += 1
 
     def get(self, key: str) -> Optional[CompileResult]:
         """Full ``CompileResult`` for ``key``, or None."""
@@ -102,6 +207,7 @@ class CompileCache:
             return None
         self.hits += 1
         self._touch(key)
+        self._count_origin(key)
         if self._mem is not None:
             self._mem[key] = result
         return result
@@ -120,6 +226,7 @@ class CompileCache:
             return None
         self.metrics_hits += 1
         self._touch(key)
+        self._count_origin(key)
         self._mem_metrics[key] = metrics
         return dict(metrics)
 
@@ -138,6 +245,8 @@ class CompileCache:
                       pickle.dumps(result, pickle.HIGHEST_PROTOCOL))
         _atomic_write(self._json(key),
                       json.dumps(metrics, sort_keys=True).encode())
+        _atomic_write(self._src(key), self.owner.encode())
+        self._origin_seen.add(key)        # own entry: never a foreign hit
         if self._mem is not None:
             self._mem[key] = result
         self._mem_metrics[key] = metrics
@@ -150,7 +259,7 @@ class CompileCache:
             if self._disk_total is None:
                 self._disk_total = self.disk_bytes()
             else:
-                for p in (self._pkl(key), self._json(key)):
+                for p in (self._pkl(key), self._json(key), self._src(key)):
                     try:
                         self._disk_total += p.stat().st_size
                     except OSError:
@@ -159,39 +268,60 @@ class CompileCache:
                 self._evict(keep=key)
 
     # -- maintenance ------------------------------------------------------
+    def _entry_paths(self, pkl: Path):
+        return [pkl, pkl.with_suffix(".json"), pkl.with_suffix(".src")]
+
     def disk_bytes(self) -> int:
         """Total bytes of the current schema's on-disk entries."""
-        base = self.root / f"v{COMPILE_KEY_SCHEMA}"
-        if not base.exists():
+        if not self._base.exists():
             return 0
-        return sum(p.stat().st_size for pat in ("*/*.pkl", "*/*.json")
-                   for p in base.glob(pat))
+        total = 0
+        for pkl in self._base.glob("*/*.pkl"):
+            for p in self._entry_paths(pkl):
+                try:
+                    total += p.stat().st_size
+                except OSError:
+                    pass
+        return total
 
     def _evict(self, keep: Optional[str] = None) -> None:
-        """LRU-by-atime eviction down to ``max_bytes``.
+        """Lock-guarded LRU-by-atime eviction down to ``max_bytes``.
 
-        Each entry's recency is the newest of its two files' access
-        times (``get`` reads the pkl, ``get_metrics`` the json) and this
+        The whole scan-and-delete runs under the store lock (``lock()``),
+        so concurrent cappers — another campaign, a serving fleet — never
+        interleave their scans and evict each other's in-flight entries;
+        each waits its turn and re-measures the store it actually sees.
+        Entries younger than ``evict_grace_s`` are exempt, so a writer's
+        freshly published artifacts survive a neighbour's eviction pass
+        even before that writer reads them back.
+
+        Each entry's recency is the newest of its files' access times
+        (``get`` reads the pkl, ``get_metrics`` the json) and this
         handle's in-process hit log (``_touch`` — memory-layer hits
         never touch the files, so without it the hottest entries would
         rank oldest).  On noatime/relatime mounts the on-disk component
         degrades toward write time, turning cross-handle recency into
-        LRU-by-insertion — still bounded, just less precise.  The just-written ``keep`` entry is never evicted, so a
-        cap smaller than one entry keeps exactly the newest.  Evicted
-        keys are also dropped from the memory layer, keeping
-        ``contains``/``get`` consistent with the disk state.  The scan's
-        recount re-seeds the running ``_disk_total`` estimate, so drift
-        from overwrites or concurrent writers self-corrects here.
+        LRU-by-insertion — still bounded, just less precise.  The
+        just-written ``keep`` entry is never evicted, so a cap smaller
+        than one entry keeps exactly the newest.  Evicted keys are also
+        dropped from the memory layer, keeping ``contains``/``get``
+        consistent with the disk state.  The scan's recount re-seeds the
+        running ``_disk_total`` estimate, so drift from overwrites or
+        concurrent writers self-corrects here.
         """
-        base = self.root / f"v{COMPILE_KEY_SCHEMA}"
-        if not base.exists():
+        if not self._base.exists():
             self._disk_total = 0
             return
-        entries = []    # (recency, key, size, paths)
+        with self.lock():
+            self._evict_locked(keep)
+
+    def _evict_locked(self, keep: Optional[str]) -> None:
+        now = time.time()
+        entries = []    # (recency, key, size, paths, fresh)
         total = 0
-        for pkl in base.glob("*/*.pkl"):
+        for pkl in self._base.glob("*/*.pkl"):
             key = pkl.stem
-            paths = [pkl, pkl.with_suffix(".json")]
+            paths = self._entry_paths(pkl)
             size = recency = 0
             for p in paths:
                 try:
@@ -200,15 +330,16 @@ class CompileCache:
                     continue
                 size += st.st_size
                 recency = max(recency, st.st_atime, st.st_mtime)
+            fresh = now - recency < self.evict_grace_s
             recency = max(recency, self._access.get(key, 0.0))
-            entries.append((recency, key, size, paths))
+            entries.append((recency, key, size, paths, fresh))
             total += size
         if total > self.max_bytes:
-            entries.sort()                 # oldest access first
-            for _, key, size, paths in entries:
+            entries.sort(key=lambda e: (e[0], e[1]))   # oldest access first
+            for _, key, size, paths, fresh in entries:
                 if total <= self.max_bytes:
                     break
-                if key == keep:
+                if key == keep or fresh:
                     continue
                 for p in paths:
                     try:
@@ -234,8 +365,13 @@ class CompileCache:
         import shutil
         self.drop_memory()
         self._disk_total = None
-        shutil.rmtree(self.root / f"v{COMPILE_KEY_SCHEMA}",
-                      ignore_errors=True)
+        shutil.rmtree(self._base, ignore_errors=True)
+
+    # -- accounting -------------------------------------------------------
+    def _counters(self) -> Dict[str, int]:
+        return {"hits": self.hits, "metrics_hits": self.metrics_hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "foreign_hits": self.foreign_hits}
 
     def stats(self) -> Dict[str, int]:
         """Hit/miss counters for this handle plus the on-disk entry count.
@@ -243,15 +379,70 @@ class CompileCache:
         ``hits`` are full ``CompileResult`` lookups served, and
         ``metrics_hits`` the metric-only lookups that answered without
         unpickling a plan (the warm-sweep fast path); ``misses`` counts
-        lookups of either kind that found nothing.  Campaign summaries
-        surface this bundle (``CampaignResult.cache_stats``)."""
+        lookups of either kind that found nothing.  ``foreign_hits``
+        counts disk hits on entries *another* owner published — the
+        cross-campaign reuse a shared store exists for.  Campaign
+        summaries surface this bundle (``CampaignResult.cache_stats``)."""
         disk = 0
-        base = self.root / f"v{COMPILE_KEY_SCHEMA}"
-        if base.exists():
-            disk = sum(1 for _ in base.glob("*/*.pkl"))
-        return {"hits": self.hits, "metrics_hits": self.metrics_hits,
-                "misses": self.misses, "disk_entries": disk,
-                "evictions": self.evictions}
+        if self._base.exists():
+            disk = sum(1 for _ in self._base.glob("*/*.pkl"))
+        out = self._counters()
+        out["disk_entries"] = disk
+        return out
+
+    def publish_stats(self) -> Path:
+        """Publish this handle's counters into the shared store.
+
+        Writes ``<root>/v<schema>/_stats/<owner>.json`` atomically
+        (cumulative counters — re-publishing overwrites, it never double
+        counts), so ``shared_stats`` can aggregate every participating
+        campaign/fleet without any of them talking to each other.
+        """
+        d = self._base / "_stats"
+        d.mkdir(parents=True, exist_ok=True)
+        payload = dict(self._counters(), owner=self.owner, time=time.time())
+        path = d / f"{self.owner}.json"
+        _atomic_write(path, json.dumps(payload, sort_keys=True).encode())
+        return path
+
+    def shared_stats(self) -> Dict[str, int]:
+        """Aggregate counters across every handle that published.
+
+        This handle's *live* counters are included even if it has not
+        published yet; ``owners`` counts the distinct participants.
+        """
+        return shared_stats(self.root, extra=[dict(self._counters(),
+                                                   owner=self.owner)])
+
+    def __repr__(self) -> str:
+        return (f"CompileCache(root={str(self.root)!r}, "
+                f"owner={self.owner!r}, max_bytes={self.max_bytes})")
+
+
+def shared_stats(root, extra=None) -> Dict[str, int]:
+    """Sum the per-owner counter bundles published under ``root``.
+
+    ``extra`` (internal) merges live, not-yet-published handle counters;
+    a published bundle for the same owner is superseded by its live one.
+    """
+    base = Path(root) / f"v{COMPILE_KEY_SCHEMA}" / "_stats"
+    by_owner: Dict[str, Dict] = {}
+    if base.exists():
+        for p in sorted(base.glob("*.json")):
+            try:
+                with open(p) as f:
+                    by_owner[p.stem] = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+    for bundle in (extra or []):
+        by_owner[bundle["owner"]] = bundle
+    keys = ("hits", "metrics_hits", "misses", "evictions", "foreign_hits")
+    out = {k: 0 for k in keys}
+    for bundle in by_owner.values():
+        for k in keys:
+            out[k] += int(bundle.get(k, 0))
+    out["owners"] = len(by_owner)
+    return out
 
 
 def _atomic_write(path: Path, data: bytes) -> None:

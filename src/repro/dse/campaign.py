@@ -8,7 +8,7 @@ pool and one compile cache, so wall-clock scales with total work and a
 point compiled for one workload's rung is a cache hit everywhere else it
 appears.
 
-Two modes:
+Three modes:
 
   * ``"halving"`` (default) — one ``HalvingSearch`` per workload, driven
     in lockstep: each round gathers the current rung's jobs from every
@@ -17,6 +17,12 @@ Two modes:
     points through the batched proxy cost model (one vectorized
     ``dse.proxy_vec`` pass per workload — see runner); full compiles are
     paid only for each workload's survivor set.
+  * ``"adaptive"`` — one ``AdaptiveSearch`` per workload through the
+    same lockstep loop: every round interleaves each workload's ask
+    batch (or screened compile rung) into the shared queue.  Each
+    workload's searcher gets its own ``numpy`` Generator derived from
+    ``seed`` and the workload's position, so campaigns are reproducible
+    end to end; extra searcher knobs pass through ``adaptive=...``.
   * ``"exhaustive"`` — every (workload, point) pair at full fidelity in
     one round-robin-interleaved queue; the reference baseline.
 
@@ -179,6 +185,8 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
                  robust_tol: float = 0.10,
                  cache: Optional[CompileCache] = None,
                  workers: int = 1,
+                 seed: int = 0,
+                 adaptive: Optional[Mapping] = None,
                  verify_best: bool = False,
                  verify_batch: int = 2) -> CampaignResult:
     """Sweep every workload against ``space`` through one shared queue.
@@ -197,7 +205,7 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
     """
     wls = _as_workloads(workloads)
     points, base = resolve_space(space, base_arch)
-    if mode not in ("halving", "exhaustive"):
+    if mode not in ("halving", "adaptive", "exhaustive"):
         raise ValueError(f"unknown campaign mode {mode!r}")
 
     outcomes: Dict[str, WorkloadOutcome] = {}
@@ -218,10 +226,24 @@ def run_campaign(workloads, space: Union[DesignSpace, Sequence[DesignPoint]],
                 frontier=pareto_frontier([r for r in rs if r.ok], objectives),
                 full_evals=len(rs), objective=objective)
     else:
-        searches = {name: HalvingSearch(g, points, base, eta=eta,
-                                        ladder=ladder, objective=objective,
-                                        min_keep=min_keep)
-                    for name, g in wls}
+        if mode == "adaptive":
+            from .adaptive import AdaptiveSearch
+            knobs = dict(adaptive or {})
+            # every workload derives its own generator from one root
+            # seed (the knobs' seed wins if both are given) and its
+            # stable position, so campaigns replay end to end
+            root_seed = knobs.pop("seed", seed)
+            knobs.setdefault("objective", objective)
+            knobs.setdefault("min_keep", min_keep)
+            searches = {name: AdaptiveSearch(g, points, base,
+                                             seed=(root_seed, k), **knobs)
+                        for k, (name, g) in enumerate(wls)}
+        else:
+            searches = {name: HalvingSearch(g, points, base, eta=eta,
+                                            ladder=ladder,
+                                            objective=objective,
+                                            min_keep=min_keep)
+                        for name, g in wls}
         # one memo for the whole campaign: identical proxy jobs recurring
         # across rungs or rounds (multi-proxy ladders, repeated points)
         # cost a dict lookup instead of a recompute

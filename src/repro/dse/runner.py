@@ -16,6 +16,12 @@ Execution model:
     group, bit-exact against per-job scalar ``compiler.proxy_metrics``
     (infeasible points come back as ``error`` results carrying the
     scalar raise's message);
+  * compile jobs with ``screen=True`` first pass through the same
+    batched proxy, grouped per (graph, arch): points the proxy proves
+    infeasible come back as ``error`` results carrying the exact string
+    the compiler would have raised, and only feasible points reach the
+    compile path — this is how search rungs evaluate a whole promotion
+    batch per (graph, arch) instead of compiling one point at a time;
   * compile jobs with ``workers <= 1`` (or a single job) run in-process,
     reusing the caller's cache object so its memory layer stays live;
   * compile jobs with ``workers > 1`` are farmed to a process pool; each
@@ -68,6 +74,7 @@ class EvalJob:
     point: DesignPoint
     arch: CIMArch                # base arch the point's overrides apply to
     proxy: bool = False          # analytic proxy_metrics instead of compile
+    screen: bool = False         # batch-screen infeasibility before compiling
     tag: Any = None              # caller routing key (e.g. workload name)
 
 
@@ -126,10 +133,10 @@ def _eval_job_worker(args: Tuple[EvalJob, Optional[str]]) -> SweepResult:
     return _eval_job(job, cache)
 
 
-def _eval_proxy_jobs(jobs: Sequence[EvalJob],
+def _fill_proxy_memo(jobs: Sequence[EvalJob],
                      memo: Dict[Any, Tuple[Optional[Dict], Optional[str]]],
-                     ) -> List[SweepResult]:
-    """Evaluate proxy jobs through the batched proxy cost model.
+                     ) -> None:
+    """Score every job's point through the batched proxy cost model.
 
     Jobs are grouped per (graph, base arch); each group's unmemoized
     points go through one ``proxy_metrics_batch`` pass.  ``memo`` maps
@@ -148,7 +155,6 @@ def _eval_proxy_jobs(jobs: Sequence[EvalJob],
     for j in jobs:
         groups.setdefault((id(j.graph), id(j.arch)), []).append(j)
 
-    results: List[SweepResult] = []
     for gkey, grp in groups.items():
         graph, arch = grp[0].graph, grp[0].arch
         memo[("__pin__", *gkey)] = (graph, arch)
@@ -176,13 +182,50 @@ def _eval_proxy_jobs(jobs: Sequence[EvalJob],
                         memo[key] = (None, f"{type(e).__name__}: {e}")
                         continue
                     memo[key] = _scalar_oracle(graph, arch_pt, pt)
-        for j in grp:
-            metrics, error = memo[(*gkey, j.point)]
-            results.append(SweepResult(
-                index=j.index, point=j.point,
-                metrics=dict(metrics) if metrics is not None else None,
-                error=error, tag=j.tag))
-    return results
+
+
+def _eval_proxy_jobs(jobs: Sequence[EvalJob],
+                     memo: Dict[Any, Tuple[Optional[Dict], Optional[str]]],
+                     ) -> List[SweepResult]:
+    """Evaluate proxy jobs through the batched proxy cost model."""
+    _fill_proxy_memo(jobs, memo)
+    return [SweepResult(
+        index=j.index, point=j.point,
+        metrics=(dict(m) if (m := memo[(id(j.graph), id(j.arch),
+                                        j.point)][0]) is not None else None),
+        error=memo[(id(j.graph), id(j.arch), j.point)][1], tag=j.tag)
+        for j in jobs]
+
+
+def _screen_compile_jobs(jobs: Sequence[EvalJob],
+                         memo: Dict[Any, Tuple[Optional[Dict],
+                                               Optional[str]]],
+                         ) -> Tuple[List[EvalJob], List[SweepResult]]:
+    """Partition compile jobs by batched infeasibility screening.
+
+    Runs the whole job list through one vectorized proxy pass per
+    (graph, arch) group and splits it into (feasible jobs, infeasible
+    results).  The proxy's infeasibility conditions — mode/level
+    mismatch, binding below core granularity, virtual-crossbar span over
+    the per-core budget — are raised by ``compile_graph`` with the
+    *identical* message strings (they share ``compiler.mode_error``, the
+    same ``CostModel.placement`` and the same span cap), so a screened
+    rung reports the same errors the one-at-a-time compile path would,
+    without paying a compile attempt per infeasible point.  Feasible
+    jobs still go through the real compiler: screening changes where
+    infeasibility is *detected*, never what a feasible point scores.
+    """
+    _fill_proxy_memo(jobs, memo)
+    passed: List[EvalJob] = []
+    failed: List[SweepResult] = []
+    for j in jobs:
+        error = memo[(id(j.graph), id(j.arch), j.point)][1]
+        if error is None:
+            passed.append(j)
+        else:
+            failed.append(SweepResult(index=j.index, point=j.point,
+                                      metrics=None, error=error, tag=j.tag))
+    return passed, failed
 
 
 def run_jobs(jobs: Iterable[EvalJob],
@@ -199,9 +242,17 @@ def run_jobs(jobs: Iterable[EvalJob],
     proxy_jobs = [j for j in jobs if j.proxy]
     compile_jobs = [j for j in jobs if not j.proxy]
     results: List[SweepResult] = []
+    memo = proxy_memo if proxy_memo is not None else {}
     if proxy_jobs:
-        memo = proxy_memo if proxy_memo is not None else {}
         results.extend(_eval_proxy_jobs(proxy_jobs, memo))
+
+    screened = [j for j in compile_jobs if j.screen]
+    if screened:
+        # batched rung: one vectorized infeasibility pass per (graph,
+        # arch) group, then only the survivors reach the compiler
+        passed, failed = _screen_compile_jobs(screened, memo)
+        results.extend(failed)
+        compile_jobs = [j for j in compile_jobs if not j.screen] + passed
 
     if compile_jobs:
         if workers <= 1 or len(compile_jobs) <= 1:

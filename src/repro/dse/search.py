@@ -63,6 +63,21 @@ DEFAULT_LADDER: Tuple[Rung, ...] = (
     Rung("proxy"), Rung("prefix", 0.5), Rung("full"))
 
 
+def rung_prefix_graph(graph: Graph, frac: float) -> Graph:
+    """The prefix graph a ``frac`` rung compiles (``graph`` itself when
+    the fraction rounds to the whole model).
+
+    A prefix with no CIM node compiles to an empty plan and ranks
+    nothing, so the cut is extended to cover the first CIM operator.
+    """
+    n = max(1, round(len(graph.nodes) * frac))
+    first_cim = next((i for i, nd in enumerate(graph.nodes)
+                      if nd.is_cim), None)
+    if first_cim is not None:
+        n = max(n, first_cim + 1)
+    return graph.prefix(n)
+
+
 @dataclasses.dataclass
 class RungLog:
     rung: int
@@ -139,14 +154,7 @@ class HalvingSearch:
     def _rung_graph(self, rung: Rung) -> Graph:
         if rung.fidelity != "prefix":
             return self.graph          # proxy scores the full graph
-        n = max(1, round(len(self.graph.nodes) * rung.frac))
-        # a prefix with no CIM node compiles to an empty plan and ranks
-        # nothing: extend it to cover the first CIM operator
-        first_cim = next((i for i, nd in enumerate(self.graph.nodes)
-                          if nd.is_cim), None)
-        if first_cim is not None:
-            n = max(n, first_cim + 1)
-        return self.graph.prefix(n)
+        return rung_prefix_graph(self.graph, rung.frac)
 
     # -- driving ---------------------------------------------------------
     def jobs(self, index_base: int = 0, tag: Any = None) -> List[EvalJob]:
@@ -156,9 +164,14 @@ class HalvingSearch:
         rung = self.ladder[self.rung]
         graph = self._rung_graph(rung)
         self._pending = list(self.survivors)
+        proxy = rung.fidelity == "proxy"
+        # compile rungs are *batched*: run_jobs screens the whole rung's
+        # infeasibility in one vectorized pass per (graph, arch) before
+        # any point reaches the compiler (identical error strings either
+        # way — see runner._screen_compile_jobs)
         return [EvalJob(index=index_base + k, graph=graph,
                         point=self.points[i], arch=self.base_arch,
-                        proxy=rung.fidelity == "proxy", tag=tag)
+                        proxy=proxy, screen=not proxy, tag=tag)
                 for k, i in enumerate(self._pending)]
 
     def observe(self, results: Sequence[SweepResult]) -> None:

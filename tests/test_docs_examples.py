@@ -35,6 +35,8 @@ def test_dse_doc_snippets_execute(tmp_path, monkeypatch):
     # the guide's narrative claims, re-checked here explicitly
     assert ns["sr"].full_evals * 3 <= len(ns["points"])
     assert ns["camp"].full_evals <= ns["camp"].exhaustive_evals // 3
+    assert ns["asr"].ask_log == ns["rerun"].ask_log     # seeded determinism
+    assert ns["agg"]["foreign_hits"] > 0                # shared-store reuse
 
 
 def test_serving_doc_snippets_execute(tmp_path, monkeypatch):

@@ -191,3 +191,165 @@ def test_design_point_label_roundtrip():
     assert "XBM" in p.label() and "cell_precision" in p.label()
     kw = p.compile_kwargs()
     assert kw["use_pipeline"] is False and kw["level"] is ComputingMode.XBM
+
+
+# ---------------------------------------------------------- shared store
+def _fill(cache, keys, result, nbytes=0):
+    for i, k in enumerate(keys):
+        cache.put(k, result, metrics={"latency_cycles": float(i)})
+
+
+def _compile_once():
+    g = get_workload("tiny_mlp")
+    arch = get_arch("toy")
+    return g, arch, compiler.compile_graph(g, arch)
+
+
+def test_cache_cross_owner_hit_accounting(tmp_path):
+    """Disk hits on another campaign's entries count as foreign_hits."""
+    from repro.dse import shared_stats
+    root = tmp_path / "shared"
+    g, arch, _ = _compile_once()
+    a = CompileCache(root, owner="campA")
+    compiler.compile_graph(g, arch, cache=a)
+    key = compiler.compile_key(g, arch)
+
+    b = CompileCache(root, owner="campB")
+    assert b.get_metrics(key) is not None
+    assert b.stats()["foreign_hits"] == 1
+    b.get_metrics(key)                       # memory-layer re-hit
+    assert b.stats()["foreign_hits"] == 1    # counted once per key
+    assert b.get(key) is not None
+    assert b.stats()["foreign_hits"] == 1
+
+    # the writer's own entries are never foreign, even from disk
+    a.drop_memory()
+    assert a.get_metrics(key) is not None
+    assert a.stats()["foreign_hits"] == 0
+
+    # per-owner bundles aggregate through the store itself
+    a.publish_stats()
+    b.publish_stats()
+    agg = shared_stats(root)
+    assert agg["owners"] == 2
+    assert agg["foreign_hits"] == 1
+    assert agg["metrics_hits"] >= 2
+    # live counters supersede a stale published bundle
+    b.get_metrics(compiler.compile_key(g, arch.replace(act_bits=4)))
+    assert b.shared_stats()["misses"] == agg["misses"] + 1
+
+
+def test_cache_eviction_waits_for_store_lock(tmp_path):
+    """Eviction is serialized through the store lock (the 2-writer race)."""
+    import threading
+    import time
+    root = tmp_path / "c"
+    _, _, result = _compile_once()
+    a = CompileCache(root, max_bytes=1)
+    _fill(a, [f"{i:02x}aaaa" for i in range(4)], result)
+
+    b = CompileCache(root)
+    held = threading.Event()
+    release = threading.Event()
+
+    def holder():
+        with b.lock():
+            held.set()
+            release.wait(10)
+
+    t_hold = threading.Thread(target=holder)
+    t_hold.start()
+    assert held.wait(10)
+    done = []
+    t_evict = threading.Thread(target=lambda: (a._evict(), done.append(1)))
+    t_evict.start()
+    time.sleep(0.3)
+    assert not done, "eviction must block while another handle holds the lock"
+    release.set()
+    t_evict.join(10)
+    t_hold.join(10)
+    assert done and a.evictions > 0
+
+
+def test_cache_eviction_two_writers_keep_inflight_entries(tmp_path):
+    """Concurrent capped writers never evict each other's fresh entries."""
+    import os
+    import threading
+    root = tmp_path / "shared"
+    _, _, result = _compile_once()
+    probe = CompileCache(root)
+    probe.put("00probe", result, metrics={"latency_cycles": 0.0})
+    entry_bytes = probe.disk_bytes()
+    probe.clear()
+
+    cap = 3 * entry_bytes
+    a = CompileCache(root, max_bytes=cap, evict_grace_s=60.0, owner="wa")
+    b = CompileCache(root, max_bytes=cap, evict_grace_s=60.0, owner="wb")
+    failures = []
+
+    def writer(cache, tag):
+        for i in range(8):
+            key = f"{i:02x}{tag}"
+            cache.put(key, result, metrics={"latency_cycles": float(i)})
+            if cache.get_metrics(key) is None:    # in-flight re-read
+                failures.append(key)
+
+    threads = [threading.Thread(target=writer, args=(a, "wa")),
+               threading.Thread(target=writer, args=(b, "wb"))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not failures, f"evicted in-flight entries: {failures}"
+
+    # age everything past the grace window: the next capped put prunes
+    old = __import__("time").time() - 120
+    for p in (root / f"v{compiler.COMPILE_KEY_SCHEMA}").glob("*/*.*"):
+        os.utime(p, (old, old))
+    c = CompileCache(root, max_bytes=cap, evict_grace_s=60.0, owner="wc")
+    c.put("ffnewest", result, metrics={"latency_cycles": 99.0})
+    assert c.evictions > 0
+    assert c.disk_bytes() <= cap
+    assert c.get_metrics("ffnewest") is not None   # newest entry survives
+
+
+def test_cache_stats_shape_and_disk_accounting(tmp_path):
+    """_stats bundles never count toward entry size or entry count."""
+    root = tmp_path / "c"
+    _, _, result = _compile_once()
+    cache = CompileCache(root, owner="x")
+    cache.put("00abc", result)
+    before = cache.disk_bytes()
+    cache.publish_stats()
+    assert cache.disk_bytes() == before
+    s = cache.stats()
+    assert s["disk_entries"] == 1
+    for k in ("hits", "metrics_hits", "misses", "evictions",
+              "foreign_hits"):
+        assert k in s
+
+
+# ---------------------------------------------------------------- report
+def test_scorecards_render_and_roundtrip(tmp_path):
+    import json
+    from repro.dse import (campaign_scorecard, run_campaign,
+                           search_scorecard, successive_halving)
+    g = get_workload("tiny_mlp")
+    space = _toy_space()
+    cache = CompileCache(tmp_path / "c")
+    sr = successive_halving(g, space, cache=cache)
+    card = search_scorecard(sr, "tiny_mlp")
+    md = card.to_markdown()
+    assert "tiny_mlp" in md and "|proxy" in md and "full" in md
+    data = json.loads(card.to_json())
+    assert data["meta"]["full_evals"] == sr.full_evals
+    assert len(data["rows"]) == len(sr.rungs)
+
+    camp = run_campaign({"tiny_mlp": g}, space, cache=cache)
+    ccard = campaign_scorecard(camp)
+    cmd = ccard.to_markdown()
+    assert "tiny_mlp" in cmd and "cache_foreign_hits" in cmd
+    cdata = json.loads(ccard.to_json())
+    assert cdata["meta"]["mode"] == "halving"
+    assert cdata["rows"][0]["workload"] == "tiny_mlp"
+    assert cdata["rows"][0]["full_evals"] == camp.full_evals

@@ -259,7 +259,8 @@ def test_campaign_summary_surfaces_cache_stats(tmp_path):
     camp = run_campaign(graphs, space, cache=cache)
     assert camp.cache_stats is not None
     assert set(camp.cache_stats) == {"hits", "metrics_hits", "misses",
-                                     "disk_entries", "evictions"}
+                                     "disk_entries", "evictions",
+                                     "foreign_hits"}
     assert "compile cache:" in camp.summary()
     assert "metric-only hits" in camp.summary()
     # uncached campaigns don't invent stats

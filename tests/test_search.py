@@ -8,9 +8,12 @@ from repro.core import compiler
 from repro.core.abstraction import (CellType, ChipTier, CIMArch,
                                     ComputingMode, CoreTier, CrossbarTier,
                                     get_arch)
-from repro.dse import (CompileCache, DesignSpace, HalvingSearch, Rung,
-                       run_campaign, successive_halving, sweep)
-from repro.workloads import get_workload
+from repro.dse import (AdaptiveSearch, CompileCache, DesignSpace,
+                       HalvingSearch, Rung, adaptive_search, run_campaign,
+                       successive_halving, sweep)
+from repro.dse.runner import EvalJob, run_jobs
+from repro.dse.search import rung_prefix_graph
+from repro.workloads import get_workload, resnet18
 
 SIM_ARCH = CIMArch(
     name="test-wlm", mode=ComputingMode.WLM,
@@ -234,3 +237,150 @@ def test_campaign_accepts_graph_sequences(tmp_path):
     assert list(camp.workloads) == ["tiny_mlp"]
     with pytest.raises(ValueError):
         run_campaign(_campaign_graphs(), space, mode="bogus")
+
+
+# ----------------------------------------------------------------- adaptive
+def test_adaptive_deterministic_end_to_end(tmp_path):
+    """Same seed -> same ask sequence -> same best point (any workers)."""
+    g = get_workload("tiny_cnn")
+    space = _space()
+    kw = dict(seed=7, batch=12, prefix_keep=6, full_keep=3)
+    a = adaptive_search(g, space, cache=CompileCache(tmp_path / "a"), **kw)
+    b = adaptive_search(g, space, cache=CompileCache(tmp_path / "b"), **kw)
+    assert a.ask_log == b.ask_log
+    assert a.best is not None
+    assert a.best.point == b.best.point
+    assert a.best.metrics == b.best.metrics
+    assert [r.point for r in a.results] == [r.point for r in b.results]
+    # the pool path must not perturb the search either
+    c = adaptive_search(g, space, cache=CompileCache(tmp_path / "c"),
+                        workers=4, **kw)
+    assert c.ask_log == a.ask_log and c.best.point == a.best.point
+    # and the seed actually feeds the generator: the ask sequence is
+    # reproducible from AdaptiveSearch's own rng, not global numpy state
+    np.random.seed(0)
+    d = adaptive_search(g, space, cache=CompileCache(tmp_path / "d"), **kw)
+    assert d.ask_log == a.ask_log
+
+
+def test_adaptive_full_budget_matches_exhaustive_best(tmp_path):
+    """With every knob opened up, adaptive degenerates to exhaustive."""
+    g = get_workload("tiny_mlp")
+    space = _space()
+    n = len(space.points())
+    cache = CompileCache(tmp_path / "c")
+    exhaustive = sweep(g, space, cache=cache)
+    ar = adaptive_search(g, space, cache=cache, seed=0, batch=n,
+                         prefix_keep=n, full_keep=n)
+    assert ar.proxy_evals == n
+    assert ar.best.point == _best(exhaustive).point
+    assert ar.best.metrics == _best(exhaustive).metrics
+
+
+def test_adaptive_spends_less_than_exhaustive(tmp_path):
+    g = get_workload("tiny_cnn")
+    space = _space()
+    n = len(space.points())
+    ar = adaptive_search(g, space, cache=CompileCache(tmp_path / "c"),
+                         seed=3, batch=12, prefix_keep=6, full_keep=3)
+    assert ar.best is not None
+    assert ar.full_evals * 3 <= n
+    assert ar.prefix_evals <= 6 and ar.full_evals <= 3
+    assert [r.fidelity for r in ar.rungs][-2:] == ["prefix", "full"]
+    assert ar.rungs[0].fidelity == "proxy"
+    assert ar.ask_rounds == len(ar.ask_log) >= 1
+
+
+def test_adaptive_handles_infeasible_points(tmp_path):
+    g = get_workload("tiny_cnn")
+    toy = get_arch("toy")
+    arch = toy.replace(chip=toy.chip.__class__(core_number=(1, 1)))
+    # B->XB on a 1-core chip is infeasible: the model must learn around
+    # it and still land on a feasible B->XBC winner
+    ar = adaptive_search(g, DesignSpace(arch), seed=1, batch=4,
+                         prefix_keep=4, full_keep=2)
+    assert ar.best is not None
+    assert ar.best.point.binding == "B->XBC"
+
+
+def test_adaptive_validation():
+    g = get_workload("tiny_mlp")
+    space = _space()
+    with pytest.raises(ValueError):
+        AdaptiveSearch(g, space, gamma=1.5)
+    with pytest.raises(ValueError):
+        AdaptiveSearch(g, space, explore=-0.1)
+    with pytest.raises(ValueError):
+        AdaptiveSearch(g, space, prefix_keep=4, full_keep=8)
+    s = AdaptiveSearch(g, space)
+    with pytest.raises(RuntimeError):
+        s.observe([None])
+    with pytest.raises(RuntimeError):
+        s.search_result()
+
+
+def test_adaptive_campaign_mode(tmp_path):
+    space = _space()
+    knobs = dict(batch=16, prefix_keep=8, full_keep=4)
+    camp = run_campaign(_campaign_graphs(), space,
+                        cache=CompileCache(tmp_path / "c1"),
+                        mode="adaptive", seed=5, adaptive=knobs)
+    again = run_campaign(_campaign_graphs(), space,
+                         cache=CompileCache(tmp_path / "c2"),
+                         mode="adaptive", seed=5, adaptive=knobs)
+    assert _flat(camp) == _flat(again)        # seeded end to end
+    assert camp.mode == "adaptive"
+    assert camp.full_evals * 3 <= camp.exhaustive_evals
+    for w in camp.workloads.values():
+        assert w.best is not None
+        assert [r.fidelity for r in w.rungs][0] == "proxy"
+    # the winners hand off to the serving fleet unchanged
+    from repro.serving.engine import points_from_campaign
+    assert set(points_from_campaign(camp)) == set(camp.workloads)
+
+
+# ------------------------------------------------------ batched prefix rung
+def test_batched_prefix_rung_bit_exact_small_resnet():
+    """Screened batch compiles == one-at-a-time prefix compiles."""
+    g = resnet18(in_hw=32)
+    pg = rung_prefix_graph(g, 0.5)
+    assert pg is not g
+    space = DesignSpace(get_arch("isaac-baseline"),
+                        levels=("WLM", "XBM"), duplication=(True,))
+    points = space.points()
+    base = space.arch
+    batched = run_jobs([EvalJob(index=i, graph=pg, point=p, arch=base,
+                                screen=True)
+                        for i, p in enumerate(points)])
+    one_at_a_time = run_jobs([EvalJob(index=i, graph=pg, point=p, arch=base)
+                              for i, p in enumerate(points)])
+    assert len(batched) == len(one_at_a_time) == len(points)
+    for bt, oo in zip(batched, one_at_a_time):
+        assert bt.index == oo.index and bt.point == oo.point
+        assert bt.metrics == oo.metrics        # bit-exact scores
+        assert bt.error == oo.error
+
+
+def test_batched_rung_masks_infeasibility_like_compile(tmp_path):
+    """Screened-out points carry the compiler's exact error strings."""
+    g = get_workload("tiny_cnn")
+    toy = get_arch("toy")
+    arch = toy.replace(chip=toy.chip.__class__(core_number=(1, 1)))
+    points = DesignSpace(arch).points()
+    screened = run_jobs([EvalJob(index=i, graph=g, point=p, arch=arch,
+                                 screen=True) for i, p in enumerate(points)])
+    compiled = run_jobs([EvalJob(index=i, graph=g, point=p, arch=arch)
+                         for i, p in enumerate(points)])
+    assert any(r.error for r in screened)      # the space has bad points
+    for sc, cp in zip(screened, compiled):
+        assert sc.error == cp.error            # identical strings
+        assert sc.metrics == cp.metrics
+    # and the strings are the scalar proxy's raise messages
+    for sc in screened:
+        if sc.error is None:
+            continue
+        with pytest.raises(Exception) as ei:
+            kwargs = sc.point.compile_kwargs()
+            kwargs.pop("expand", None)
+            compiler.proxy_metrics(g, sc.point.arch_for(arch), **kwargs)
+        assert sc.error == f"{type(ei.value).__name__}: {ei.value}"
