@@ -12,6 +12,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 def main() -> None:
     import dse_sweep
+    import faults_bench
     import fig20_generality
     import fig21_ablation
     import fig22_sensitivity
@@ -31,6 +32,8 @@ def main() -> None:
         ("dse (cross-tier sweep + compile cache)", dse_sweep.rows),
         ("serving (multi-tenant fleet vs sequential services)",
          serving_bench.rows),
+        ("faults (injection accuracy + chip-kill failover)",
+         faults_bench.rows),
     ]
     print("name,value,note")
     for title, fn in sections:

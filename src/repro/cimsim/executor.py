@@ -290,9 +290,14 @@ class LoweredExecutable:
                  stream="auto",
                  route: Optional[backend.KernelRoute] = None,
                  use_kernel: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 faults=None):
         import jax
         self.plan = plan
+        #: optional cimsim.faults.FaultMap — tile weight transforms fold
+        #: into ``pack`` and the per-tile post-MVM ADC offsets become
+        #: trace constants, so the jitted program stays one program
+        self.faults = faults
         self.graph: Graph = plan.graph
         self.arch: CIMArch = plan.arch
         self.params = params or cim_mvm_params(plan.arch)
@@ -338,6 +343,7 @@ class LoweredExecutable:
             depth = max(n, self._pool_shapes.get(key, (0,))[0])
             self._pool_shapes[key] = (depth, rl, cl)
         self.stats.swaps = len(self._seg_layout)
+        self._build_fault_offsets()
         self._pool_idx: Dict[str, np.ndarray] = {}
         for node in self.graph.nodes:
             if node.op_type in ("MaxPool", "AveragePool"):
@@ -431,6 +437,63 @@ class LoweredExecutable:
             cp.conv_out = (cout, oh, ow)
         return cp
 
+    # -- fault folding ----------------------------------------------------
+    def _build_fault_offsets(self) -> None:
+        """Precompute the fault map's post-MVM ADC-offset terms as trace
+        constants, one per dispatch shape:
+
+          * exact path — a per-node (C,) aggregate (each tile span's
+            offset lands once per window row, and the spans partition
+            the matrix, so columns simply sum over their row tiles);
+          * bucket / stream paths — a (T, 1, c_len) stack matching the
+            tile axis of the batched MVM.
+
+        The interpreter adds ``tile_offset(name, span)`` to every span's
+        partial sum; these are the same vectors pre-folded per shape.
+        """
+        self._off_exact: Dict[str, Optional[np.ndarray]] = {}
+        self._off_bucket: Dict[Tuple[str, str], Optional[np.ndarray]] = {}
+        self._off_stream: Dict[Tuple[str, int], Optional[np.ndarray]] = {}
+        if self.faults is None:
+            return
+
+        def stack(spans):
+            offs = [self.faults.tile_offset(name, s) for s in spans]
+            if all(o is None for o in offs):
+                return None
+            c_len = spans[0][3] - spans[0][2]
+            return np.stack(
+                [np.zeros(c_len, np.int64) if o is None else o
+                 for o in offs]).astype(np.int32)[:, None, :]
+
+        for name, cp in self._plans.items():
+            if cp.exact:
+                off = np.zeros(cp.c, np.int64)
+                any_off = False
+                for b in cp.buckets:
+                    for s in b.spans:
+                        t = self.faults.tile_offset(name, s)
+                        if t is not None:
+                            off[s[2]:s[3]] += t
+                            any_off = True
+                self._off_exact[name] = \
+                    off.astype(np.int32) if any_off else None
+            elif self._stream:
+                for gi, g in enumerate(cp.stream_groups):
+                    self._off_stream[(name, gi)] = stack(g.spans)
+            else:
+                for b in cp.buckets:
+                    self._off_bucket[(name, b.key)] = stack(b.spans)
+
+    def _fault_tiles(self, name: str, spans, w: np.ndarray) -> np.ndarray:
+        """Stack tile ``spans`` of signed matrix ``w``, applying the
+        fault map's per-tile weight transform when one is active."""
+        if self.faults is None:
+            return np.stack([w[r0:r1, c0:c1] for r0, r1, c0, c1 in spans])
+        return np.stack(
+            [self.faults.apply_tile(name, s, w[s[0]:s[1], s[2]:s[3]])
+             for s in spans])
+
     # -- weight packing ---------------------------------------------------
     def pack(self, weights: Dict[str, np.ndarray]) -> Dict[str, Any]:
         """Ahead-of-time weight programming: the ``cim.write_*`` ops.
@@ -459,9 +522,17 @@ class LoweredExecutable:
                 for (seg, key), layout in self._seg_layout.items():
                     if seg != si:
                         continue
-                    tiles = np.stack(
-                        [mats[name][r0:r1, c0:c1]
-                         for name, (r0, r1, c0, c1) in layout])
+                    if self.faults is None:
+                        tiles = np.stack(
+                            [mats[name][r0:r1, c0:c1]
+                             for name, (r0, r1, c0, c1) in layout])
+                    else:
+                        tiles = np.stack(
+                            [self.faults.apply_tile(
+                                name, span,
+                                mats[name][span[0]:span[1],
+                                           span[2]:span[3]])
+                             for name, span in layout])
                     entry[key] = jnp.asarray(tiles + self._ow)   # unsigned
                 segs.append(entry)
             return {"segs": segs}
@@ -472,6 +543,18 @@ class LoweredExecutable:
                 raise ValueError(f"{name}: weights {w.shape} != "
                                  f"{(cp.r, cp.c)}")
             if cp.exact:
+                if self.faults is not None:
+                    # tile spans partition the matrix (coverage is
+                    # checked at lowering), so per-span surgery yields
+                    # the full effective matrix; values stay in the
+                    # signed weight range, keeping the split-plane GEMM
+                    # exact
+                    w = w.copy()
+                    for b in cp.buckets:
+                        for s in b.spans:
+                            w[s[0]:s[1], s[2]:s[3]] = \
+                                self.faults.apply_tile(
+                                    name, s, w[s[0]:s[1], s[2]:s[3]])
                 if cp.r <= _F32_SPLIT_MAX_R and self.params.act_bits <= 8 \
                         and self.params.weight_bits <= 8:
                     # split-plane GEMM: w = 16*w_hi + w_lo with w_hi in
@@ -484,8 +567,7 @@ class LoweredExecutable:
                 continue
             entry: Dict[str, Any] = {}
             for b in cp.buckets:
-                tiles = np.stack([w[r0:r1, c0:c1]
-                                  for r0, r1, c0, c1 in b.spans])
+                tiles = self._fault_tiles(name, b.spans, w)
                 w_u = tiles + self._ow                       # unsigned
                 entry[b.key] = {
                     "w": jnp.asarray(w_u),
@@ -588,10 +670,13 @@ class LoweredExecutable:
             else:
                 acc = jnp.matmul(rows, pw["w"],
                                  preferred_element_type=jnp.int32)
+            off = self._off_exact.get(node.name)
+            if off is not None:
+                acc = acc + off
         elif self._stream:
             flat = (rows + self._ox).reshape(n * m, cp.r)
             acc = jnp.zeros((n * m, cp.c), jnp.int32)
-            for g in cp.stream_groups:
+            for gi, g in enumerate(cp.stream_groups):
                 rows_idx = np.stack([np.arange(r0, r1, dtype=np.int32)
                                      for r0, r1, _, _ in g.spans])
                 xt = jnp.moveaxis(flat[:, rows_idx], 1, 0)  # (T, NM, r_len)
@@ -605,6 +690,9 @@ class LoweredExecutable:
                 sx = xt.sum(-1, keepdims=True)
                 y = (y_u - self._ow * sx - self._ox * sw
                      + g.r_len * self._ox * self._ow)
+                off = self._off_stream.get((node.name, gi))
+                if off is not None:
+                    y = y + off
                 col_idx = np.concatenate(
                     [np.arange(c0, c1, dtype=np.int32)
                      for _, _, c0, c1 in g.spans])
@@ -623,6 +711,9 @@ class LoweredExecutable:
                 sx = xt.sum(-1, keepdims=True)
                 y = (y_u - self._ow * sx - self._ox * pw[b.key]["sw"]
                      + b.r_len * self._ox * self._ow)
+                off = self._off_bucket.get((node.name, b.key))
+                if off is not None:
+                    y = y + off
                 col_idx = np.concatenate(
                     [np.arange(c0, c1, dtype=np.int32)
                      for _, _, c0, c1 in b.spans])
@@ -727,6 +818,7 @@ def lower(plan: SchedulePlan, program: Program,
           mode: Optional[str] = None, stream="auto",
           use_kernel: Optional[bool] = None,
           interpret: Optional[bool] = None,
+          faults=None,
           cache: bool = True) -> LoweredExecutable:
     """Lower a compiled ``(plan, program)`` to a batched executable.
 
@@ -734,11 +826,14 @@ def lower(plan: SchedulePlan, program: Program,
     ``mode=``; the deprecated ``use_kernel=``/``interpret=`` booleans
     keep their historical meaning); ``stream="auto"`` enables
     weight-update streaming exactly for multi-segment schedules.
+    ``faults`` (a ``cimsim.faults.FaultMap``) folds device faults into
+    weight packing plus trace-constant post-MVM offsets.
 
     Cached process-wide by ``compile_key_for_plan(plan) x params x
-    resolved route x streaming``, so repeated lowerings of the same
-    compile config — calibration loops, verification sweeps, serving
-    restarts — reuse the traced executable and its jit cache.
+    resolved route x streaming x fault-map identity``, so repeated
+    lowerings of the same compile config — calibration loops,
+    verification sweeps, serving restarts — reuse the traced executable
+    and its jit cache.
     """
     from ..core import compiler
     params = params or cim_mvm_params(plan.arch)
@@ -748,13 +843,13 @@ def lower(plan: SchedulePlan, program: Program,
     key = None
     if cache:
         key = (compiler.compile_key_for_plan(plan), params, route.mode,
-               streamed)
+               streamed, None if faults is None else faults.token)
         hit = _LOWER_CACHE.get(key)
         if hit is not None:
             _LOWER_CACHE.move_to_end(key)
             return hit
     exe = LoweredExecutable(plan, program, params, route=route,
-                            stream=streamed)
+                            stream=streamed, faults=faults)
     if key is not None:
         _LOWER_CACHE[key] = exe
         while len(_LOWER_CACHE) > _LOWER_CACHE_MAX:

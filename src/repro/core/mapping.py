@@ -150,6 +150,54 @@ def bind_arrays(r, c, *, rows, cols, slices, b_to_xb):
             "xbs_per_vxb": out[3], "feasible": out[4]}
 
 
+class FaultBudgetError(ValueError):
+    """Fault retirement exceeds the crossbar's capacity: after retiring
+    the requested faulty wordlines/bitlines the remaining geometry cannot
+    bind any weight tile (or the fault-aware compile loop could not find
+    enough clean lines within its retirement budget).  Carries
+    ``retire_rows``/``retire_cols`` so callers can report how far the
+    retirement climbed before giving up."""
+
+    def __init__(self, msg: str, *, retire_rows: int = 0,
+                 retire_cols: int = 0):
+        self.retire_rows = retire_rows
+        self.retire_cols = retire_cols
+        super().__init__(msg)
+
+
+def retired_geometry(arch: CIMArch, retire_rows: int = 0,
+                     retire_cols: int = 0) -> CIMArch:
+    """``arch`` with ``retire_rows`` wordlines and ``retire_cols``
+    bitlines removed from every crossbar's bindable geometry.
+
+    This is the compiler half of fault-aware remapping: compiling
+    against the shrunk crossbar leaves each physical tile spare lines,
+    which the runtime fault map's clean-line selection then uses to
+    steer every weight row/column group away from faulty hardware
+    (``cimsim.faults.FaultMap(remap=True)``).  ``parallel_row`` is
+    clamped to the surviving rows.  Raises ``FaultBudgetError`` when the
+    retirement leaves no bindable geometry (no rows, or fewer columns
+    than one logical weight's bit slices).
+    """
+    rows = arch.xb.rows - int(retire_rows)
+    cols = arch.xb.cols - int(retire_cols)
+    slices = math.ceil(arch.weight_bits / arch.xb.cell_precision)
+    if rows < 1 or cols < slices:
+        raise FaultBudgetError(
+            f"retiring {retire_rows} rows / {retire_cols} cols of a "
+            f"{arch.xb.rows}x{arch.xb.cols} crossbar leaves {rows}x{cols} "
+            f"— below the {max(1, slices)}-column minimum for "
+            f"{arch.weight_bits}-bit weights",
+            retire_rows=retire_rows, retire_cols=retire_cols)
+    xb = dataclasses.replace(
+        arch.xb, xb_size=(rows, cols),
+        parallel_row=min(arch.xb.parallel_row, rows))
+    name = arch.name
+    if retire_rows or retire_cols:
+        name = f"{arch.name}-ret{retire_rows}r{retire_cols}c"
+    return arch.replace(xb=xb, name=name)
+
+
 def vxbs_per_core(arch: CIMArch, mapping: VXBMapping) -> int:
     """``Core_VXB`` of Eq. (1): VXBs that fit in one core."""
     return arch.core.n_xbs // mapping.xbs_per_vxb

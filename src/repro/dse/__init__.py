@@ -30,7 +30,8 @@ turns the one-shot compiler into a search service:
 See docs/DSE.md for the guide.
 """
 from .adaptive import AdaptiveResult, AdaptiveSearch, adaptive_search
-from .cache import CompileCache, default_cache_dir, shared_stats
+from .cache import (CacheLockTimeout, CompileCache,
+                    default_cache_dir, shared_stats)
 from .campaign import (CampaignResult, RobustPoint, WorkloadOutcome,
                        robust_points, run_campaign)
 from .pareto import DEFAULT_OBJECTIVES, dominates, pareto_frontier
@@ -45,7 +46,8 @@ from .space import DesignPoint, DesignSpace, apply_arch_overrides
 
 __all__ = [
     "AdaptiveResult", "AdaptiveSearch", "adaptive_search",
-    "CompileCache", "default_cache_dir", "shared_stats",
+    "CacheLockTimeout", "CompileCache", "default_cache_dir",
+    "shared_stats",
     "CampaignResult", "RobustPoint", "WorkloadOutcome",
     "robust_points", "run_campaign",
     "DEFAULT_OBJECTIVES", "dominates", "pareto_frontier",

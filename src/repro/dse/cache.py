@@ -54,9 +54,23 @@ from ..core.compiler import COMPILE_KEY_SCHEMA, CompileResult
 #: environment override for the on-disk cache location
 CACHE_DIR_ENV = "REPRO_COMPILE_CACHE_DIR"
 
-#: spin-lock parameters for the no-``fcntl`` fallback (seconds)
+#: spin-lock parameters for the no-``fcntl`` fallback (seconds): poll
+#: backoff doubles deterministically from _LOCK_POLL_S up to
+#: _LOCK_POLL_MAX_S (no jitter — retry schedules must replay exactly),
+#: and markers older than _LOCK_STALE_S are presumed abandoned by a
+#: dead process and broken
 _LOCK_POLL_S = 0.005
+_LOCK_POLL_MAX_S = 0.25
 _LOCK_STALE_S = 30.0
+
+
+class CacheLockTimeout(TimeoutError):
+    """The store lock could not be acquired within ``timeout_s``.
+
+    Raised instead of blocking forever when a caller bounds the wait —
+    a holder that is alive but slow (not stale) keeps the lock, and the
+    caller decides whether to retry, skip maintenance, or surface the
+    contention."""
 
 
 def default_cache_dir() -> Path:
@@ -118,23 +132,53 @@ class CompileCache:
 
     # -- locking ----------------------------------------------------------
     @contextlib.contextmanager
-    def lock(self) -> Iterator[None]:
-        """Exclusive store-wide lock (blocks until acquired).
+    def lock(self, timeout_s: Optional[float] = None,
+             stale_s: Optional[float] = None,
+             force_spin: bool = False) -> Iterator[None]:
+        """Exclusive store-wide lock.
 
         Guards multi-file maintenance — eviction uses it internally.
         Prefer ``flock`` (kernel-released on process death); fall back to
-        an ``O_EXCL`` spin lock with stale-break where ``fcntl`` is
-        missing.  Publication (``put``) does *not* take the lock: atomic
-        renames are already safe under concurrency.
+        an ``O_EXCL`` spin lock where ``fcntl`` is missing.  Publication
+        (``put``) does *not* take the lock: atomic renames are already
+        safe under concurrency.
+
+        ``timeout_s`` bounds the wait on either path — ``None`` blocks
+        until acquired, otherwise :class:`CacheLockTimeout` is raised
+        once the deadline passes.  The spin path polls with a
+        deterministic exponential backoff (``_LOCK_POLL_S`` doubling to
+        ``_LOCK_POLL_MAX_S``, no jitter) and breaks markers older than
+        ``stale_s`` (default ``_LOCK_STALE_S``) — a crashed holder never
+        wedges the store, unlike a naive O_EXCL loop.  ``force_spin``
+        selects the marker path even when ``fcntl`` exists, so the
+        fallback is testable on platforms that have ``flock``.
         """
         self._base.mkdir(parents=True, exist_ok=True)
-        try:
-            import fcntl
-        except ImportError:
-            fcntl = None
+        fcntl = None
+        if not force_spin:
+            try:
+                import fcntl
+            except ImportError:
+                fcntl = None
+        deadline = None if timeout_s is None else time.monotonic() + timeout_s
         if fcntl is not None:
             with open(self._base / ".lock", "a+b") as f:
-                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                if deadline is None:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                else:
+                    poll = _LOCK_POLL_S
+                    while True:
+                        try:
+                            fcntl.flock(f.fileno(),
+                                        fcntl.LOCK_EX | fcntl.LOCK_NB)
+                            break
+                        except OSError:
+                            if time.monotonic() >= deadline:
+                                raise CacheLockTimeout(
+                                    f"store lock at {self._base} not "
+                                    f"acquired within {timeout_s}s") from None
+                            time.sleep(poll)
+                            poll = min(poll * 2, _LOCK_POLL_MAX_S)
                 try:
                     yield
                 finally:
@@ -142,19 +186,29 @@ class CompileCache:
             return
         # portable fallback: spin on an exclusive-create marker
         marker = self._base / ".lock.excl"
+        stale = _LOCK_STALE_S if stale_s is None else stale_s
+        poll = _LOCK_POLL_S
         while True:
             try:
                 fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
-                os.close(fd)
+                try:     # holder identity, for post-mortem diagnostics
+                    os.write(fd, f"{self.owner} pid={os.getpid()}".encode())
+                finally:
+                    os.close(fd)
                 break
             except FileExistsError:
                 try:   # break locks abandoned by a dead process
-                    if time.time() - marker.stat().st_mtime > _LOCK_STALE_S:
+                    if time.time() - marker.stat().st_mtime > stale:
                         marker.unlink(missing_ok=True)
                         continue
                 except OSError:
-                    pass
-                time.sleep(_LOCK_POLL_S)
+                    continue   # holder released between open and stat
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise CacheLockTimeout(
+                        f"store lock at {marker} not acquired within "
+                        f"{timeout_s}s") from None
+                time.sleep(poll)
+                poll = min(poll * 2, _LOCK_POLL_MAX_S)
         try:
             yield
         finally:

@@ -94,17 +94,34 @@ class SweepResult:
 
 def evaluate_point(graph: Graph, base_arch: CIMArch, point: DesignPoint,
                    cache: Optional[CompileCache] = None,
+                   fault_model=None,
                    ) -> Tuple[Dict[str, float], bool]:
-    """(metrics, was_cached) for one design point at full fidelity."""
+    """(metrics, was_cached) for one design point at full fidelity.
+
+    With ``fault_model`` (a ``cimsim.faults.FaultModel``) set, the
+    metrics gain ``fault_top1``: executor-backed top-1 agreement with
+    the fault-free executor under that model (see
+    ``cimsim.faults.accuracy_under_faults``) — so campaigns can rank
+    points by robustness, not just latency.  Robustness is a property
+    of the realized arch, so it is computed fresh (never answered from
+    the metrics cache) and appended to whatever the cache returned.
+    """
     arch = point.arch_for(base_arch)
     kwargs = point.compile_kwargs()
+    metrics = cached = None
     if cache is not None:
         key = compiler.compile_key(graph, arch, **kwargs)
         metrics = cache.get_metrics(key)
-        if metrics is not None:
-            return metrics, True
-    result = compiler.compile_graph(graph, arch, cache=cache, **kwargs)
-    return result.metrics(), False
+        cached = metrics is not None
+    if metrics is None:
+        result = compiler.compile_graph(graph, arch, cache=cache, **kwargs)
+        metrics, cached = result.metrics(), False
+    if fault_model is not None:
+        from ..cimsim.faults import accuracy_under_faults
+        metrics = dict(metrics)
+        metrics["fault_top1"] = accuracy_under_faults(
+            graph, arch, fault_model, **kwargs)
+    return metrics, cached
 
 
 def _eval_job(job: EvalJob, cache: Optional[CompileCache]) -> SweepResult:

@@ -16,5 +16,6 @@ from .batcher import (DEFAULT_BUCKETS, Batch, DynamicBatcher,   # noqa: F401
 from .trace import (TraceRecorder, load_trace,                  # noqa: F401
                     validate_chrome_trace)
 from .traffic import TrafficModel, synthetic_trace              # noqa: F401
-from .fleet import (AdmissionError, CimCluster, CimFleet,       # noqa: F401
-                    FleetStats, ReplanPolicy)
+from .fleet import (AdmissionError, ChipFault, CimCluster,      # noqa: F401
+                    CimFleet, FaultSchedule, FleetStats,
+                    ReplanPolicy, TransientKernelError)

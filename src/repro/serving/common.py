@@ -44,6 +44,10 @@ class BaseRequest:
                                                     kw_only=True)
     # filled by the service
     latency_s: float = dataclasses.field(default=0.0, kw_only=True)
+    # set once the miss has been counted into some ServiceStats — a
+    # request that is evicted past-deadline during migration and later
+    # completes (or is evicted twice) must be counted exactly once
+    miss_recorded: bool = dataclasses.field(default=False, kw_only=True)
 
     def missed_deadline(self, completion_s: float) -> bool:
         return self.deadline_s is not None and completion_s > self.deadline_s
@@ -116,7 +120,11 @@ class ServiceStats:
     deadline_misses: int = 0             # cumulative missed deadlines
     #: sliding window of recent per-request latencies (seconds)
     window_latencies_s: List[float] = dataclasses.field(default_factory=list)
-    #: parallel window: True where that request missed its deadline
+    #: window of recent per-request miss flags.  Served requests append
+    #: in lockstep with ``window_latencies_s``; misses discovered
+    #: outside a batch (``record_misses`` — e.g. eviction during
+    #: migration) append here only, so the two windows may differ in
+    #: length while ``window_deadline_misses`` stays complete.
     window_missed: List[bool] = dataclasses.field(default_factory=list)
 
     def record(self, latencies_s: List[float], batch_s: float,
@@ -135,6 +143,18 @@ class ServiceStats:
         self.window_latencies_s.extend(latencies_s)
         self.window_missed.extend(missed)
         del self.window_latencies_s[:-LATENCY_WINDOW]
+        del self.window_missed[:-LATENCY_WINDOW]
+
+    def record_misses(self, n: int) -> None:
+        """Account ``n`` deadline misses discovered outside a served
+        batch — requests evicted past-deadline during migration or
+        chip failover never reach ``record``, and silently dropping
+        their misses undercounts both the cumulative and the windowed
+        counters.  No latency is recorded (none was measured)."""
+        if n <= 0:
+            return
+        self.deadline_misses += n
+        self.window_missed.extend([True] * n)
         del self.window_missed[:-LATENCY_WINDOW]
 
     @property

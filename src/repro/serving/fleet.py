@@ -68,6 +68,64 @@ class AdmissionError(RuntimeError):
             f"limit {limit} and no lower-priority tenant left to shed")
 
 
+class TransientKernelError(RuntimeError):
+    """A kernel dispatch failed for a transient, retryable reason (a
+    flaky device link, a spurious launch failure injected by a fault
+    schedule).  ``CimFleet`` retries the dispatch up to ``max_retries``
+    times before letting it propagate — anything *else* an engine
+    raises is treated as permanent and surfaces immediately."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipFault:
+    """One scheduled chip-level fault (service-clock seconds).
+
+    ``kind="kill"`` removes the chip: its pending requests are
+    evacuated onto survivors through the pending-preserving re-plan
+    path.  ``kind="degrade"`` keeps the chip serving but multiplies
+    its dispatch durations by ``degrade_factor`` (a thermally-throttled
+    or half-dead chip), compounding across repeated degrades.
+    """
+
+    at_s: float
+    chip: str
+    kind: str = "kill"                  # "kill" | "degrade"
+    degrade_factor: float = 2.0
+
+    def __post_init__(self):
+        if self.kind not in ("kill", "degrade"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind == "degrade" and self.degrade_factor <= 0:
+            raise ValueError("degrade_factor must be positive")
+
+
+class FaultSchedule:
+    """Deterministic time-ordered chip-fault injector for a cluster.
+
+    Faults fire when the cluster's clock passes ``at_s`` — checked on
+    every ``submit``/``step``/``drain``/``control`` — each exactly
+    once.  Purely driven by the caller's clock, so replays are exact.
+    """
+
+    def __init__(self, faults: Iterable[ChipFault]):
+        self.faults: List[ChipFault] = sorted(faults,
+                                              key=lambda f: (f.at_s, f.chip))
+        self._next = 0
+
+    def due(self, now: float) -> List[ChipFault]:
+        """Pop every not-yet-fired fault with ``at_s <= now``."""
+        out: List[ChipFault] = []
+        while self._next < len(self.faults) \
+                and self.faults[self._next].at_s <= now:
+            out.append(self.faults[self._next])
+            self._next += 1
+        return out
+
+    @property
+    def remaining(self) -> int:
+        return len(self.faults) - self._next
+
+
 @dataclasses.dataclass
 class FleetStats:
     """Per-tenant stats plus the fleet-wide aggregate (see
@@ -114,7 +172,8 @@ class CimFleet:
                  use_executor: bool = True,
                  points: Optional[Dict[str, Dict]] = None,
                  trace: Optional[TraceRecorder] = None,
-                 chip: Optional[str] = None):
+                 chip: Optional[str] = None,
+                 max_retries: int = 2):
         if plan is None:
             plan = plan_tenancy(tenants, arch)
         else:
@@ -162,6 +221,12 @@ class CimFleet:
                 buckets=tuple(buckets), max_wait_s=max_wait_s,
                 est_batch_s=lambda n, t=name: self._observed_s.get(t))
         self._rid = 0
+        #: bounded deterministic retry budget for TransientKernelError
+        self.max_retries = max_retries
+        self.retries = 0                 # cumulative retried dispatches
+        #: dispatch-duration multiplier (>1 when the chip is degraded by
+        #: a fault schedule; the cluster sets it)
+        self.slowdown = 1.0
 
     # -- admission -------------------------------------------------------
     def submit(self, model: str, inputs: Dict[str, np.ndarray], *,
@@ -210,13 +275,26 @@ class CimFleet:
         """Queued requests for one tenant (admission control input)."""
         return len(self._batchers[model])
 
-    def evict_pending(self) -> List[CimRequest]:
-        """Remove and return every queued request (cluster migration:
-        the new plan's fleets re-admit them; nothing is dropped)."""
+    def evict_pending(self, now: Optional[float] = None) -> List[CimRequest]:
+        """Remove and return every queued request (cluster migration /
+        chip failover: the new plan's fleets re-admit them; nothing is
+        dropped).  With ``now`` given, evicted requests already past
+        their deadline are counted into the tenant's ``ServiceStats``
+        here (exactly once, via ``miss_recorded``) — they may complete
+        on another chip much later or never, and dropping the miss at
+        eviction silently undercounted the deadline-miss counters."""
         out: List[CimRequest] = []
-        for b in self._batchers.values():
-            out.extend(b.queue)
-            b.queue = []
+        for name, b in self._batchers.items():
+            evicted, b.queue = b.queue, []
+            if now is not None:
+                n = 0
+                for r in evicted:
+                    if r.missed_deadline(now) and not r.miss_recorded:
+                        r.miss_recorded = True
+                        n += 1
+                if n:
+                    self.pool[name].stats.record_misses(n)
+            out.extend(evicted)
         return out
 
     # -- dispatch --------------------------------------------------------
@@ -259,7 +337,22 @@ class CimFleet:
 
     def _dispatch(self, name: str, batch, now: float) -> List[CimRequest]:
         engine = self.pool[name]
-        dt = engine.serve_padded(batch.requests, batch.bucket)
+        # bounded deterministic retry: only the typed transient channel
+        # is retried (no sleeps — the service clock is caller-driven);
+        # exhaustion re-raises so permanent failures stay loud
+        for attempt in range(self.max_retries + 1):
+            try:
+                dt = engine.serve_padded(batch.requests, batch.bucket)
+                break
+            except TransientKernelError:
+                if attempt >= self.max_retries:
+                    raise
+                self.retries += 1
+                if self.trace is not None:
+                    self.trace.instant(self.chip, f"retry:{name}", "fault",
+                                       now, attempt=attempt + 1,
+                                       bucket=batch.bucket)
+        dt *= self.slowdown
         # steady-state estimate feeding the deadline-pressure policy
         prev = self._observed_s.get(name)
         self._observed_s[name] = dt if prev is None else 0.5 * (prev + dt)
@@ -267,7 +360,10 @@ class CimFleet:
         for r in batch.requests:
             r.latency_s = (now - r.arrival_s) + dt
             latencies.append(r.latency_s)
-            missed.append(r.missed_deadline(now + dt))
+            m = r.missed_deadline(now + dt) and not r.miss_recorded
+            if m:
+                r.miss_recorded = True
+            missed.append(m)
         misses = sum(missed)
         engine.stats.record(latencies, dt, misses, missed=missed)
         if self.trace is not None:
@@ -396,7 +492,9 @@ class CimCluster:
                  points: Optional[Dict[str, Dict]] = None,
                  trace: Optional[TraceRecorder] = None,
                  max_queue: int = 256,
-                 policy: Optional[ReplanPolicy] = None):
+                 policy: Optional[ReplanPolicy] = None,
+                 faults: Optional[FaultSchedule] = None,
+                 max_retries: int = 2):
         self.specs = {t.name: t for t in tenants}
         if len(self.specs) != len(list(tenants)):
             raise ValueError("tenant names must be unique")
@@ -417,11 +515,17 @@ class CimCluster:
         self.max_queue = max_queue
         self.policy = policy or ReplanPolicy()
         self.traffic = _TrafficEwma(self.policy.ewma_alpha)
+        self.fault_schedule = faults
+        self.max_retries = max_retries
         # operator counters (cumulative)
         self.migrations = 0              # applied re-plans
         self.demotions = 0               # tenants shed to time-multiplexed
         self.rejected = 0                # AdmissionError count
         self.demoted: set = set()        # currently-shed tenant names
+        self.failed: set = set()         # chips killed by the schedule
+        self.chip_kills = 0              # cumulative kill faults applied
+        self.chip_degrades = 0           # cumulative degrade faults applied
+        self._chip_slowdown: Dict[str, float] = {}
         self._arrivals_since_replan = 0
         self._rid = 0
         self._retired: Dict[str, ServiceStats] = {}
@@ -434,11 +538,15 @@ class CimCluster:
     # -- plan installation / migration -----------------------------------
     def _build_chip(self, chip: str, tplan: TenancyPlan) -> CimFleet:
         specs = [p.spec for p in tplan.tenants.values()]
-        return CimFleet(specs, self.archs[chip], plan=tplan,
-                        cache=self.cache, seed=self.seed,
-                        buckets=self.buckets, max_wait_s=self.max_wait_s,
-                        use_executor=self.use_executor, points=self.points,
-                        trace=self.trace, chip=chip)
+        fleet = CimFleet(specs, self.archs[chip], plan=tplan,
+                         cache=self.cache, seed=self.seed,
+                         buckets=self.buckets, max_wait_s=self.max_wait_s,
+                         use_executor=self.use_executor, points=self.points,
+                         trace=self.trace, chip=chip,
+                         max_retries=self.max_retries)
+        # an active degrade fault outlives re-plans of its chip
+        fleet.slowdown = self._chip_slowdown.get(chip, 1.0)
+        return fleet
 
     def _install_plan(self, plan: FleetPlan,
                       now: Optional[float] = None) -> None:
@@ -453,7 +561,7 @@ class CimCluster:
                     and _same_chip_plan(old.chips[chip], tplan):
                 continue                       # placement unchanged: keep
             if prior is not None:
-                pending.extend(prior.evict_pending())
+                pending.extend(prior.evict_pending(now=now))
                 self._retire(prior)
                 self._chip_busy_base[chip] = \
                     self._chip_busy_base.get(chip, 0.0) + prior.serve_s()
@@ -462,7 +570,7 @@ class CimCluster:
         for chip in list(self.fleets):
             if chip not in plan.chips:         # chip emptied by the plan
                 prior = self.fleets.pop(chip)
-                pending.extend(prior.evict_pending())
+                pending.extend(prior.evict_pending(now=now))
                 self._retire(prior)
                 self._chip_busy_base[chip] = \
                     self._chip_busy_base.get(chip, 0.0) + prior.serve_s()
@@ -541,6 +649,7 @@ class CimCluster:
             raise KeyError(f"unknown model {req.model!r}; tenants: "
                            f"{self.names}")
         now = time.monotonic() if now is None else now
+        self._apply_faults(now)
         self._admit(req.model, now)
         req.arrival_s = now
         self.traffic.arrival(req.model, now)
@@ -583,11 +692,88 @@ class CimCluster:
         self._replan(now, reason="degrade")
         return True
 
+    # -- fault injection / failover --------------------------------------
+    def _apply_faults(self, now: float) -> None:
+        """Fire every due fault of the schedule (kills first would not
+        matter: ``due`` preserves time order, ties break by chip)."""
+        if self.fault_schedule is None:
+            return
+        for f in self.fault_schedule.due(now):
+            if f.kind == "kill":
+                if f.chip in self.archs:
+                    self._fail_chip(f.chip, now)
+            else:
+                self._degrade_chip(f, now)
+
+    def _degrade_chip(self, fault: ChipFault, now: float) -> None:
+        factor = self._chip_slowdown.get(fault.chip, 1.0) \
+            * fault.degrade_factor
+        self._chip_slowdown[fault.chip] = factor
+        fleet = self.fleets.get(fault.chip)
+        if fleet is not None:
+            fleet.slowdown = factor
+        self.chip_degrades += 1
+        if self.trace is not None:
+            self.trace.instant(fault.chip, "chip_degrade", "fault", now,
+                               factor=round(factor, 4))
+
+    def _fail_chip(self, chip: str, now: float) -> None:
+        """Chip loss: retire its stats, evacuate its queued requests,
+        re-plan the survivors (climbing the degradation ladder when the
+        remaining capacity cannot hold every resident tenant), and
+        re-route the evacuees.  Zero accepted requests are dropped."""
+        fleet = self.fleets.pop(chip, None)
+        self.archs.pop(chip, None)
+        self.failed.add(chip)
+        self.chip_kills += 1
+        pending: List[CimRequest] = []
+        if fleet is not None:
+            pending = fleet.evict_pending(now=now)
+            self._retire(fleet)
+            self._chip_busy_base[chip] = \
+                self._chip_busy_base.get(chip, 0.0) + fleet.serve_s()
+        if self.trace is not None:
+            self.trace.instant(chip, "chip_kill", "fault", now,
+                               evacuated=len(pending),
+                               survivors=len(self.archs))
+        if not self.archs:
+            raise AdmissionError("*", len(pending), 0)
+        self._failover_replan(now)
+        for req in pending:                    # evacuated, never dropped
+            self._route(req)
+
+    def _failover_replan(self, now: float) -> None:
+        """Re-plan onto the surviving chips.  When the lost capacity
+        makes the plan infeasible, extend the degradation ladder —
+        demote the lowest-priority not-yet-demoted tenant to
+        time-multiplexed residency and retry — before giving up (the
+        planner's error propagates once everyone is demoted)."""
+        while True:
+            try:
+                self._replan(now, reason="failover")
+                return
+            except ValueError:
+                candidates = sorted(
+                    (s for s in self.specs.values()
+                     if s.name not in self.demoted),
+                    key=lambda s: (s.priority, s.name))
+                if not candidates:
+                    raise
+                victim = candidates[0]
+                self.demoted.add(victim.name)
+                self.demotions += 1
+                if self.trace is not None:
+                    chip = sorted(self.archs)[0]
+                    self.trace.instant(chip, f"demote:{victim.name}",
+                                       "admission", now,
+                                       for_tenant="failover")
+
     # -- dispatch --------------------------------------------------------
     def step(self, now: Optional[float] = None,
              force: bool = False) -> List[CimRequest]:
         """One dispatch pass over every chip (see ``CimFleet.step``)."""
         now = time.monotonic() if now is None else now
+        self._apply_faults(now)
         done: List[CimRequest] = []
         for chip in sorted(self.fleets):
             done.extend(self.fleets[chip].step(now, force=force))
@@ -596,6 +782,7 @@ class CimCluster:
     def drain(self, now: Optional[float] = None) -> List[CimRequest]:
         """Flush every chip's queues to empty."""
         now = time.monotonic() if now is None else now
+        self._apply_faults(now)
         done: List[CimRequest] = []
         for chip in sorted(self.fleets):
             done.extend(self.fleets[chip].drain(now))
@@ -619,6 +806,7 @@ class CimCluster:
         (every batching window or few) on the same clock as ``submit``.
         """
         now = time.monotonic() if now is None else now
+        self._apply_faults(now)
         window = self.traffic.roll(now)
         if self.trace is not None and window > 0:
             for chip in sorted(self.fleets):
@@ -709,7 +897,9 @@ class CimCluster:
         """Plan + stats + control-counter digest."""
         extra = (f"cluster: {self.migrations} migrations, "
                  f"{self.demotions} demotions, {self.rejected} rejected, "
-                 f"demoted={sorted(self.demoted)}")
+                 f"demoted={sorted(self.demoted)}, "
+                 f"{self.chip_kills} kills / {self.chip_degrades} degrades, "
+                 f"failed={sorted(self.failed)}")
         return "\n".join([self.plan.summary(), self.stats().summary(),
                           extra])
 

@@ -19,3 +19,31 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "accel" in item.keywords:
             item.add_marker(skip)
+
+
+#: per-test wall-clock ceiling used when pytest-timeout is unavailable
+#: (CI installs the plugin and passes --timeout; this fallback keeps a
+#: hung test from wedging a plain local `pytest` run forever)
+_FALLBACK_TIMEOUT_S = 900
+
+
+@pytest.fixture(autouse=True)
+def _test_deadline(request):
+    import signal
+    if request.config.pluginmanager.hasplugin("timeout") or \
+            not hasattr(signal, "SIGALRM"):
+        yield                     # plugin active (or no SIGALRM): defer
+        return
+
+    def _expired(signum, frame):
+        pytest.fail(f"test exceeded the {_FALLBACK_TIMEOUT_S}s fallback "
+                    "ceiling (install pytest-timeout for the CI-grade "
+                    "per-test timeout)", pytrace=False)
+
+    previous = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(_FALLBACK_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, previous)

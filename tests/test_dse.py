@@ -353,3 +353,88 @@ def test_scorecards_render_and_roundtrip(tmp_path):
     assert cdata["meta"]["mode"] == "halving"
     assert cdata["rows"][0]["workload"] == "tiny_mlp"
     assert cdata["rows"][0]["full_evals"] == camp.full_evals
+
+
+def test_cache_lock_timeout_stale_break_and_diagnostics(tmp_path):
+    """Spin-lock hardening: a bounded wait raises the typed timeout
+    while a live holder keeps the lock; an abandoned marker older than
+    ``stale_s`` is broken instead of wedging the store forever."""
+    import os
+    import threading
+    import time
+    from repro.dse import CacheLockTimeout
+    a = CompileCache(tmp_path / "c", owner="holder")
+    b = CompileCache(tmp_path / "c", owner="waiter")
+    held, release = threading.Event(), threading.Event()
+
+    def holder():
+        with a.lock(force_spin=True):
+            held.set()
+            release.wait(10)
+
+    t = threading.Thread(target=holder)
+    t.start()
+    assert held.wait(10)
+    t0 = time.monotonic()
+    with pytest.raises(CacheLockTimeout):
+        with b.lock(timeout_s=0.2, force_spin=True):
+            pass
+    assert time.monotonic() - t0 >= 0.2      # waited the full budget
+    release.set()
+    t.join(10)
+    # stale break: a marker left by a dead process is aged out
+    marker = a._base / ".lock.excl"
+    marker.write_text("dead pid=0")
+    old = time.time() - 100
+    os.utime(marker, (old, old))
+    with b.lock(timeout_s=2.0, stale_s=30.0, force_spin=True):
+        assert marker.read_text().startswith("waiter")   # holder identity
+    assert not marker.exists()
+    # the flock path honors the same bounded wait
+    import fcntl
+    with open(a._base / ".lock", "a+b") as f:
+        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        with pytest.raises(CacheLockTimeout):
+            with b.lock(timeout_s=0.2):
+                pass
+        fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+    with b.lock(timeout_s=2.0):
+        pass
+
+
+def test_cache_lock_two_process_spin_contention(tmp_path):
+    """Two real processes contending on the O_EXCL spin path: the
+    waiter acquires only after the holder releases, never concurrently
+    (the pre-hardening lock could spin forever or break a live lock)."""
+    import subprocess
+    import sys
+    import time
+    root = tmp_path / "c"
+    code = (
+        "import sys, time\n"
+        "sys.path.insert(0, sys.argv[1])\n"
+        "from repro.dse import CompileCache\n"
+        "c = CompileCache(sys.argv[2], owner='proc-holder')\n"
+        "with c.lock(force_spin=True):\n"
+        "    open(sys.argv[2] + '/held', 'w').write('1')\n"
+        "    time.sleep(1.0)\n"
+    )
+    src = str(__import__("pathlib").Path(__file__).resolve()
+              .parent.parent / "src")
+    root.mkdir()
+    proc = subprocess.Popen([sys.executable, "-c", code, src, str(root)])
+    try:
+        deadline = time.monotonic() + 20
+        while not (root / "held").exists():
+            assert proc.poll() is None, "holder process died early"
+            assert time.monotonic() < deadline, "holder never started"
+            time.sleep(0.01)
+        c = CompileCache(root, owner="waiter")
+        t0 = time.monotonic()
+        with c.lock(timeout_s=30.0, force_spin=True):
+            # the holder slept 1s under the lock; acquiring before it
+            # released would mean the spin lock was broken while live
+            assert time.monotonic() - t0 > 0.2
+            assert proc.wait(timeout=10) == 0
+    finally:
+        proc.kill()

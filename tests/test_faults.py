@@ -1,0 +1,171 @@
+"""Fault-injection stack: seeded device fault maps, interpreter-vs-
+executor bit-exactness under faults, fault-aware remapping (line
+retirement + exact top-1 recovery on resnet18), the typed fault budget,
+and the executor-backed robustness metric for DSE."""
+import numpy as np
+import pytest
+
+from repro.cimsim.executor import lower
+from repro.cimsim.faults import (FaultMap, FaultModel, accuracy_under_faults,
+                                 fault_aware_compile)
+from repro.cimsim.functional import (FunctionalSimulator, calibrate_shifts,
+                                     make_input, make_weights)
+from repro.core import compiler
+from repro.core.abstraction import get_arch
+from repro.core.graph import Graph
+from repro.core.mapping import FaultBudgetError, retired_geometry
+from repro.kernels.cim_mvm import cim_mvm_params
+from repro.workloads import get_workload
+
+ISAAC = get_arch("isaac-baseline")
+
+#: the acceptance fault map: a seeded 1% stuck-at map (whole-bitline
+#: stuck-at faults — 1% of cells — plus a sprinkle of dead rows, both
+#: line-correlated so retirement can recover them exactly)
+STUCK_1PCT = FaultModel(seed=7, stuck_col_rate=0.01, dead_row_rate=0.005)
+
+
+def _resnet18_prefix(in_hw=8, n_classes=16):
+    """The real resnet18 node list cut after the first residual add
+    (conv1 -> pool -> basic block) — genuine resnet18 layer shapes at a
+    cost the oracle interpreter can afford in tier-1."""
+    full = get_workload("resnet18", in_hw=in_hw, n_classes=n_classes)
+    cut = next(i for i, n in enumerate(full.nodes)
+               if n.op_type == "Add") + 1
+    nodes = full.nodes[:cut]
+    return Graph("resnet18-prefix", nodes, full.inputs,
+                 [nodes[-1].outputs[0]])
+
+
+# ------------------------------------------------------ device tier
+
+def test_fault_map_seeded_and_deterministic():
+    span = (0, 64, 0, 12)       # 12 logical cols x S slices fits 128
+    w = np.random.default_rng(0).integers(-128, 128, (64, 12)) \
+        .astype(np.int32)
+    a = FaultMap(STUCK_1PCT, ISAAC)
+    b = FaultMap(STUCK_1PCT, ISAAC)
+    np.testing.assert_array_equal(a.apply_tile("n", span, w),
+                                  b.apply_tile("n", span, w))
+    assert a.token == b.token
+    # a different seed is a different map (and a different cache token)
+    c = FaultMap(FaultModel(seed=8, stuck_col_rate=0.01,
+                            dead_row_rate=0.005), ISAAC)
+    assert c.token != a.token
+    assert not np.array_equal(c.apply_tile("n", span, w),
+                              a.apply_tile("n", span, w))
+    # remapped and direct placements are distinct cache identities
+    assert FaultMap(STUCK_1PCT, ISAAC, remap=True).token != a.token
+
+
+def test_clean_model_is_identity():
+    fm = FaultMap(FaultModel(seed=1), ISAAC)
+    assert not FaultModel(seed=1).any_faults
+    w = np.arange(32 * 16, dtype=np.int32).reshape(32, 16) - 200
+    np.testing.assert_array_equal(fm.apply_tile("n", (0, 32, 0, 16), w), w)
+    assert fm.tile_offset("n", (0, 32, 0, 16)) is None
+
+
+def test_resnet18_interpreter_executor_bit_exact_under_faults():
+    """Acceptance: with the seeded 1% stuck-at map on resnet18, the
+    oracle interpreter and the trace-lowered executor agree bit for bit
+    — and the faults demonstrably perturb the output."""
+    g = _resnet18_prefix()
+    p = cim_mvm_params(ISAAC)
+    weights, inputs = make_weights(g, 0), make_input(g, 0)
+    shifts = calibrate_shifts(g, weights, inputs, p)
+    res = compiler.compile_graph(g, ISAAC, expand=True)
+    sim = FunctionalSimulator(res.plan, res.program, weights, shifts,
+                              params=p, faults=FaultMap(STUCK_1PCT, ISAAC))
+    sim_out = sim.run(inputs)
+    res2 = compiler.compile_graph(g, ISAAC)
+    exe = lower(res2.plan, res2.program, params=p,
+                faults=FaultMap(STUCK_1PCT, ISAAC), cache=False)
+    exe_out = exe.run(inputs, weights, shifts)
+    clean = lower(res2.plan, res2.program, params=p, cache=False) \
+        .run(inputs, weights, shifts)
+    for t in g.outputs:
+        np.testing.assert_array_equal(sim_out[t], exe_out[t])
+        assert not np.array_equal(clean[t], exe_out[t])
+
+
+def test_lower_cache_distinguishes_fault_maps():
+    g = get_workload("tiny_mlp")
+    p = cim_mvm_params(ISAAC)
+    weights, inputs = make_weights(g, 0), make_input(g, 0)
+    shifts = calibrate_shifts(g, weights, inputs, p)
+    res = compiler.compile_graph(g, ISAAC)
+    out = {}
+    for tag, fm in (("clean", None),
+                    ("a", FaultMap(STUCK_1PCT, ISAAC)),
+                    ("a2", FaultMap(STUCK_1PCT, ISAAC)),
+                    ("b", FaultMap(FaultModel(seed=9, stuck_col_rate=0.02),
+                                   ISAAC))):
+        exe = lower(res.plan, res.program, params=p, faults=fm)
+        out[tag] = exe.run(inputs, weights, shifts)[g.outputs[0]]
+    # same map hits the trace cache and reproduces; different maps and
+    # the clean trace never collide on one cached program
+    np.testing.assert_array_equal(out["a"], out["a2"])
+    assert not np.array_equal(out["a"], out["clean"])
+    assert not np.array_equal(out["a"], out["b"])
+
+
+# ---------------------------------------------------- compiler tier
+
+def test_retired_geometry_shrinks_and_raises_typed():
+    arch = retired_geometry(ISAAC, 8, 16)
+    assert arch.xb.xb_size[0] == ISAAC.xb.xb_size[0] - 8
+    assert arch.xb.xb_size[1] == ISAAC.xb.xb_size[1] - 16
+    assert arch.xb.parallel_row <= arch.xb.xb_size[0]
+    with pytest.raises(FaultBudgetError) as ei:
+        retired_geometry(ISAAC, ISAAC.xb.xb_size[0], 0)
+    assert ei.value.retire_rows == ISAAC.xb.xb_size[0]
+
+
+def test_fault_aware_compile_exhaustion_raises_budget_error():
+    # half the bitlines stuck: no retirement budget can find clean
+    # column groups, so the remapping loop must fail *typed*
+    hopeless = FaultModel(seed=2, stuck_col_rate=0.5)
+    with pytest.raises(FaultBudgetError):
+        fault_aware_compile(get_workload("tiny_mlp"), ISAAC, hopeless,
+                            max_rounds=3)
+
+
+def test_resnet18_remap_recovers_exact_top1():
+    """Acceptance: on exact-ADC isaac, fault-aware remapping restores
+    exact top-1 agreement with the fault-free reference, while the
+    unmitigated map demonstrably degrades it."""
+    g = get_workload("resnet18", in_hw=32, n_classes=16)
+    fc = fault_aware_compile(g, ISAAC, STUCK_1PCT)
+    assert fc.retired_rows > 0 or fc.retired_cols > 0
+    assert fc.result.plan.notes["fault_retired"] == {
+        "rows": fc.retired_rows, "cols": fc.retired_cols,
+        "attempts": fc.attempts}
+    unmitigated = accuracy_under_faults(g, ISAAC, STUCK_1PCT, n_inputs=4)
+    remapped = accuracy_under_faults(g, ISAAC, STUCK_1PCT, n_inputs=4,
+                                     remap=True)
+    assert unmitigated < 1.0
+    assert remapped == 1.0
+
+
+# --------------------------------------------------------- DSE tier
+
+def test_evaluate_point_exposes_fault_metric(tmp_path):
+    from repro.dse import CompileCache, DesignPoint
+    from repro.dse.runner import evaluate_point
+    g = get_workload("tiny_mlp")
+    point = DesignPoint(level="WLM", binding="B->XBC",
+                        use_pipeline=True, use_duplication=True)
+    cache = CompileCache(tmp_path / "c")
+    model = FaultModel(seed=4, stuck_col_rate=0.02)
+    m1, cached1 = evaluate_point(g, ISAAC, point, cache=cache,
+                                 fault_model=model)
+    assert not cached1
+    assert 0.0 <= m1["fault_top1"] <= 1.0
+    # the robustness metric is executor-backed and re-derived even when
+    # the compile itself is a cache hit
+    m2, cached2 = evaluate_point(g, ISAAC, point, cache=cache,
+                                 fault_model=model)
+    assert cached2
+    assert m2["fault_top1"] == m1["fault_top1"]
+    assert "fault_top1" not in evaluate_point(g, ISAAC, point)[0]

@@ -274,3 +274,153 @@ def test_traffic_model_validation_and_rates():
     assert m.diurnal(peak_t) == pytest.approx(1.0 + m.diurnal_amp)
     assert m.rps(peak_t, burst=True) == \
         pytest.approx(m.rps(peak_t) * m.burst_mult)
+
+
+# ------------------------------------------- fault injection / failover
+
+def _fault_cluster(faults, chips=None, trace=None, **kw):
+    from repro.serving import FaultSchedule
+    return CimCluster(_tenants(), chips or _chips(),
+                      faults=FaultSchedule(faults), trace=trace,
+                      max_wait_s=0.0, **kw)
+
+
+def test_chip_kill_mid_run_loses_no_accepted_requests():
+    from repro.serving import ChipFault
+    tr = TraceRecorder()
+    cluster = _fault_cluster([ChipFault(at_s=3.0, chip="c0", kind="kill")],
+                             trace=tr)
+    submitted, t = [], 0.0
+    for i in range(24):
+        model = ("cnn", "mlp")[i % 2]
+        submitted.append(cluster.submit(
+            model, make_input(GRAPHS[model], i), now=t))
+        t += 0.5
+        if i % 6 == 5:
+            cluster.step(now=t)
+    cluster.drain(now=t)
+    # acceptance: zero accepted requests lost across the kill
+    assert all(r.outputs is not None for r in submitted)
+    assert cluster.chip_kills == 1 and cluster.failed == {"c0"}
+    assert "c0" not in cluster.fleets and "c0" not in cluster.archs
+    kills = [e for e in tr.events if e.get("name") == "chip_kill"]
+    assert len(kills) == 1 and kills[0]["args"]["survivors"] == 1
+    assert "1 kills" in cluster.summary()
+
+
+def test_chip_degrade_slowdown_compounds_and_survives_replan():
+    from repro.serving import ChipFault
+    tr = TraceRecorder()
+    cluster = _fault_cluster(
+        [ChipFault(at_s=1.0, chip="c1", kind="degrade", degrade_factor=2.0),
+         ChipFault(at_s=2.0, chip="c1", kind="degrade", degrade_factor=1.5)],
+        trace=tr,
+        policy=ReplanPolicy(min_requests=4, drift_threshold=0.3))
+    for i in range(12):
+        cluster.submit("mlp", make_input(MLP, i), now=0.5 * i)
+    cluster.drain(now=8.0)
+    assert cluster.chip_degrades == 2
+    assert cluster.fleets["c1"].slowdown == pytest.approx(3.0)
+    # a drift-driven re-plan rebuilds the chip's fleet: the slowdown is
+    # cluster-held state and must survive the rebuild
+    cluster.control(now=9.0)
+    assert cluster.migrations >= 1
+    assert cluster.fleets["c1"].slowdown == pytest.approx(3.0)
+    assert [e["args"]["factor"] for e in tr.events
+            if e.get("name") == "chip_degrade"] == [2.0, 3.0]
+
+
+def test_kill_last_chip_rejects_typed():
+    from repro.serving import AdmissionError, ChipFault
+    cluster = _fault_cluster([ChipFault(at_s=2.0, chip="c0", kind="kill")],
+                             chips={"c0": ISAAC.subarch(8, "isaac-8c")})
+    cluster.submit("mlp", make_input(MLP, 0), now=0.0)
+    with pytest.raises(AdmissionError) as ei:
+        cluster.submit("mlp", make_input(MLP, 1), now=5.0)
+    assert ei.value.model == "*" and ei.value.limit == 0
+
+
+def test_failover_ladder_demotes_then_propagates_planner_error():
+    from repro.serving import ChipFault
+    # the survivor has 1 core for 2 tenants: the failover re-plan is
+    # infeasible at any residency, so the ladder demotes everyone and
+    # the planner's error surfaces (not a silent drop)
+    chips = {"c0": ISAAC.subarch(8, "isaac-8c-a"),
+             "c1": ISAAC.subarch(1, "isaac-1c")}
+    cluster = _fault_cluster([ChipFault(at_s=2.0, chip="c0", kind="kill")],
+                             chips=chips)
+    cluster.submit("mlp", make_input(MLP, 0), now=0.0)
+    with pytest.raises(ValueError, match="cores"):
+        cluster.submit("mlp", make_input(MLP, 1), now=5.0)
+    assert cluster.demoted == {"cnn", "mlp"}
+
+
+def test_transient_kernel_error_bounded_retry():
+    from repro.serving import TransientKernelError
+    fleet = CimFleet(_tenants(), ISAAC.subarch(8, "isaac-8c"),
+                     max_wait_s=0.0, max_retries=2)
+    engine = fleet.pool["mlp"]
+    real = engine.serve_padded
+    fails = {"n": 2}
+
+    def flaky(requests, bucket):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise TransientKernelError("injected")
+        return real(requests, bucket)
+
+    engine.serve_padded = flaky
+    req = fleet.submit("mlp", make_input(MLP, 0), now=0.0)
+    fleet.drain(now=0.0)
+    assert req.outputs is not None and fleet.retries == 2
+    # budget exhausted: the typed error stays loud
+    fails["n"] = 10
+    fleet.submit("mlp", make_input(MLP, 1), now=1.0)
+    with pytest.raises(TransientKernelError):
+        fleet.drain(now=1.0)
+
+
+def test_evict_pending_counts_deadline_misses_exactly_once():
+    fleet = CimFleet(_tenants(), ISAAC.subarch(8, "isaac-8c"),
+                     max_wait_s=0.0)
+    late = [fleet.submit("mlp", make_input(MLP, i), now=0.0,
+                         deadline_s=1.0) for i in range(3)]
+    ok = fleet.submit("mlp", make_input(MLP, 3), now=0.0, deadline_s=99.0)
+    evicted = fleet.evict_pending(now=5.0)   # all 4 past eviction clock
+    assert len(evicted) == 4
+    stats = fleet.stats().tenants["mlp"]
+    assert stats.deadline_misses == 3        # ok's deadline not passed
+    assert stats.window_deadline_misses == 3
+    # re-admission and completion must not double count
+    for r in evicted:
+        fleet.requeue(r)
+    fleet.drain(now=5.0)
+    assert all(r.outputs is not None for r in late + [ok])
+    stats = fleet.stats().tenants["mlp"]
+    assert stats.deadline_misses == 3
+    # eviction again after completion: nothing new to count
+    assert fleet.evict_pending(now=9.0) == []
+    assert fleet.stats().tenants["mlp"].deadline_misses == 3
+
+
+def test_degrade_ladder_skips_already_multiplexed_tenant():
+    # the lowest-priority tenant is time-multiplexed from the start
+    # (zero resident replicas): the ladder must pass over it and demote
+    # the lowest *resident* victim instead, then reject typed once no
+    # victim remains
+    big = get_workload("resnet18", in_hw=16)
+    tenants = [TenantSpec("big", big, traffic=0.2, priority=0),
+               TenantSpec("mlp", MLP, traffic=1.0, priority=1),
+               TenantSpec("cnn", CNN, traffic=1.0, priority=2)]
+    cluster = CimCluster(tenants, {"c0": ISAAC.subarch(6, "isaac-6c")},
+                         max_wait_s=0.0, max_queue=3)
+    assert cluster.plan.total_replicas("big") == 0
+    rejected = 0
+    for i in range(20):
+        try:
+            cluster.submit("cnn", make_input(CNN, i), now=0.0)
+        except AdmissionError:
+            rejected += 1
+    assert "mlp" in cluster.demoted          # resident victim demoted
+    assert "big" not in cluster.demoted      # never a ladder victim
+    assert cluster.demotions == 1 and rejected > 0
