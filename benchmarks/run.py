@@ -17,6 +17,7 @@ def main() -> None:
     import fig21_ablation
     import fig22_sensitivity
     import kernel_bench
+    import obs_bench
     import roofline_table
     import serving_bench
     import simulator_bench
@@ -34,6 +35,7 @@ def main() -> None:
          serving_bench.rows),
         ("faults (injection accuracy + chip-kill failover)",
          faults_bench.rows),
+        ("obs (telemetry overhead + explain coverage)", obs_bench.rows),
     ]
     print("name,value,note")
     for title, fn in sections:

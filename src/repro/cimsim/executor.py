@@ -52,11 +52,14 @@ against it across chip modes, saturating-ADC configs and batch sizes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..core.abstraction import CIMArch
 from ..core.cg_opt import OpPlacement, SchedulePlan
 from ..core.graph import Graph, Node, weight_matrix_shape
@@ -310,6 +313,21 @@ class LoweredExecutable:
         self.stats = ExecutorStats(segments=self._n_segments,
                                    streamed=self._stream,
                                    kernel_mode=self.route.mode)
+        #: compile-key prefix linking this executable back to the span
+        #: the compiler drew (set by ``lower`` when tracing is on); the
+        #: first dispatch closes the compile→dispatch flow arrow
+        self._flow_key: Optional[str] = None
+        self._flow_done = False
+        #: host seconds spent packing each segment's pool payload on the
+        #: last streamed ``pack`` (the per-segment weight-programming
+        #: wall time — the only per-segment host cost that exists, since
+        #: the jitted trace stays one program)
+        self._seg_pack_s: List[float] = []
+        #: bound metric instruments for the dispatch hot path, cached
+        #: per registry identity so a dispatch pays attribute access +
+        #: a float add instead of four label-key constructions
+        self._prof: Optional[tuple] = None
+        self._disp_span = f"dispatch:{self.graph.name}"
         self._ox = 1 << (self.params.act_bits - 1)
         self._ow = 1 << (self.params.weight_bits - 1)
 
@@ -507,6 +525,31 @@ class LoweredExecutable:
         order — the payloads the traced segment-boundary swaps write
         into the pool buffers.
         """
+        reg = obs_metrics.active()
+        tr = obs_trace.get_trace()
+        if reg is None and tr is None:
+            return self._pack_impl(weights)
+        t0 = time.perf_counter()
+        packed = self._pack_impl(weights)
+        dt = time.perf_counter() - t0
+        nbytes = _packed_nbytes(packed)
+        name = self.graph.name
+        if reg is not None:
+            reg.counter("executor_packs_total", workload=name).inc()
+            reg.counter("executor_pack_bytes_total",
+                        workload=name).inc(nbytes)
+            reg.histogram("executor_pack_s").observe(dt)
+            for si, s in enumerate(self._seg_pack_s):
+                reg.histogram("executor_segment_pack_s",
+                              segment=si).observe(s)
+        if tr is not None:
+            tr.complete(obs_trace.EXECUTOR_TRACK, name, f"pack:{name}",
+                        "executor", obs_trace.now_s() - dt, dt,
+                        bytes=int(nbytes), segments=self._n_segments,
+                        streamed=self._stream)
+        return packed
+
+    def _pack_impl(self, weights: Dict[str, np.ndarray]) -> Dict[str, Any]:
         import jax.numpy as jnp
         if self._stream:
             mats: Dict[str, np.ndarray] = {}
@@ -517,7 +560,9 @@ class LoweredExecutable:
                                      f"{(cp.r, cp.c)}")
                 mats[name] = w
             segs: List[Dict[str, Any]] = []
+            self._seg_pack_s = []
             for si in range(self._n_segments):
+                t_seg = time.perf_counter()
                 entry = {}
                 for (seg, key), layout in self._seg_layout.items():
                     if seg != si:
@@ -535,6 +580,7 @@ class LoweredExecutable:
                              for name, span in layout])
                     entry[key] = jnp.asarray(tiles + self._ow)   # unsigned
                 segs.append(entry)
+                self._seg_pack_s.append(time.perf_counter() - t_seg)
             return {"segs": segs}
         packed: Dict[str, Any] = {}
         for name, cp in self._plans.items():
@@ -595,7 +641,57 @@ class LoweredExecutable:
                   ) -> Dict[str, np.ndarray]:
         """N inferences in one dispatch: every input carries a leading
         batch axis.  Pass ``packed=self.pack(weights)`` to amortize
-        weight packing across calls."""
+        weight packing across calls.
+
+        Profiling happens here, at the dispatch boundary — the jitted
+        trace stays one program, so per-segment device times do not
+        exist to measure; the whole dispatch (which the trailing
+        ``np.asarray`` synchronizes) is the honest timing unit.
+        Disabled telemetry costs two ``is None`` checks.
+        """
+        reg = obs_metrics.active()
+        tr = obs_trace.get_trace()
+        if reg is None and tr is None:
+            return self._run_batch_impl(inputs, weights, shifts,
+                                        packed=packed)
+        t0 = time.perf_counter()
+        out = self._run_batch_impl(inputs, weights, shifts, packed=packed)
+        dt = time.perf_counter() - t0
+        n = int(next(iter(out.values())).shape[0]) if out else 0
+        name = self.graph.name
+        if reg is not None:
+            prof = self._prof
+            if prof is None or prof[0] is not reg:
+                prof = self._prof = (
+                    reg,
+                    reg.counter("executor_dispatches_total",
+                                route=self.route.mode),
+                    reg.counter("executor_requests_total", workload=name),
+                    reg.counter("executor_swaps_total", workload=name),
+                    reg.histogram("executor_dispatch_s",
+                                  route=self.route.mode))
+            prof[1].inc()
+            prof[2].inc(n)
+            if self.stats.swaps:
+                prof[3].inc(self.stats.swaps)
+            prof[4].observe(dt)
+        if tr is not None:
+            now = obs_trace.now_s()
+            tr.complete(obs_trace.EXECUTOR_TRACK, name, self._disp_span,
+                        "executor", now - dt, dt, batch=n,
+                        route=self.route.mode, segments=self._n_segments,
+                        swaps=self.stats.swaps)
+            if self._flow_key is not None and not self._flow_done:
+                # close the compile→dispatch arrow inside this span
+                self._flow_done = True
+                tr.flow_end(obs_trace.EXECUTOR_TRACK, name, "artifact",
+                            "flow", now - dt / 2,
+                            flow_id=int(self._flow_key[:12], 16),
+                            key=self._flow_key[:12])
+        return out
+
+    def _run_batch_impl(self, inputs, weights=None, shifts=None, *,
+                        packed=None) -> Dict[str, np.ndarray]:
         import jax.numpy as jnp
         if packed is None:
             if weights is None:
@@ -813,6 +909,18 @@ def clear_lower_cache() -> None:
     _LOWER_CACHE.clear()
 
 
+def _packed_nbytes(obj: Any) -> int:
+    """Device-bound bytes in a ``pack`` payload (recursive over the
+    dict/list nesting; array leaves expose ``nbytes``)."""
+    if hasattr(obj, "nbytes"):
+        return int(obj.nbytes)
+    if isinstance(obj, dict):
+        return sum(_packed_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_packed_nbytes(v) for v in obj)
+    return 0
+
+
 def lower(plan: SchedulePlan, program: Program,
           params: Optional[CimMvmParams] = None, *,
           mode: Optional[str] = None, stream="auto",
@@ -847,9 +955,24 @@ def lower(plan: SchedulePlan, program: Program,
         hit = _LOWER_CACHE.get(key)
         if hit is not None:
             _LOWER_CACHE.move_to_end(key)
+            obs_metrics.count("executor_lower_cache_hits_total")
             return hit
+    t0 = time.perf_counter()
     exe = LoweredExecutable(plan, program, params, route=route,
                             stream=streamed, faults=faults)
+    dt = time.perf_counter() - t0
+    obs_metrics.count("executor_lowerings_total")
+    obs_metrics.observe("executor_lower_s", dt)
+    tr = obs_trace.get_trace()
+    if tr is not None:
+        tr.complete(obs_trace.EXECUTOR_TRACK, plan.graph.name,
+                    f"lower:{plan.graph.name}", "executor",
+                    obs_trace.now_s() - dt, dt, route=route.mode,
+                    segments=len(plan.segments), streamed=streamed)
+        # remember the compile key so the first dispatch can close the
+        # compile→dispatch flow arrow (ids match compile_graph's start)
+        exe._flow_key = (key[0] if key is not None
+                         else compiler.compile_key_for_plan(plan))
     if key is not None:
         _LOWER_CACHE[key] = exe
         while len(_LOWER_CACHE) > _LOWER_CACHE_MAX:

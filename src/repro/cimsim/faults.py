@@ -68,6 +68,8 @@ import numpy as np
 
 from ..core.abstraction import CIMArch
 from ..core.mapping import FaultBudgetError, retired_geometry
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 Span = Tuple[int, int, int, int]
 
@@ -398,10 +400,22 @@ def fault_aware_compile(graph, arch: CIMArch, model: FaultModel, *,
         if need_r == 0 and need_c == 0:
             res.plan.notes["fault_retired"] = {
                 "rows": retire_r, "cols": retire_c, "attempts": attempt}
+            obs_metrics.count("fault_compile_attempts_total", n=attempt,
+                              workload=graph.name)
+            if retire_r or retire_c:
+                obs_metrics.count("fault_retired_lines_total",
+                                  n=retire_r + retire_c,
+                                  workload=graph.name)
+            tr = obs_trace.get_trace()
+            if tr is not None:
+                tr.instant(obs_trace.COMPILER_TRACK, "fault_remap",
+                           "faults", obs_trace.now_s(), tenant=graph.name,
+                           rows=retire_r, cols=retire_c, attempts=attempt)
             return FaultCompileResult(result=res, faults=fm,
                                       retired_rows=retire_r,
                                       retired_cols=retire_c,
                                       attempts=attempt)
+        obs_metrics.count("fault_retry_rounds_total", workload=graph.name)
         retire_r += need_r
         retire_c += need_c * S
     raise FaultBudgetError(

@@ -24,6 +24,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
+from ..obs import hooks as obs_hooks
 from .abstraction import CIMArch, ComputingMode
 from .graph import Graph, Node, n_mvm, out_elems, weight_matrix_shape
 from .mapping import (BitBinding, VXBMapping, bind, cores_per_copy,
@@ -127,12 +128,22 @@ class CostModel:
         in_bits = r * self.arch.act_bits
         l1 = self.arch.core.l1_bw_bits
         t_load = in_bits / l1 if math.isfinite(l1) else 0.0
-        return OpPlacement(
+        p = OpPlacement(
             node=node, chunk=chunk, n_chunks=n_chunks, mapping=mapping,
             n_mvm=windows, cores=cores_per_copy(self.arch, mapping),
             phases=phases, row_groups=groups, t_load=t_load,
             alu_epilogue=self._epilogue(node, graph, windows),
         )
+        # provenance event, gated at the call site: this method runs once
+        # per node per design point inside DSE sweeps, so even the
+        # payload-dict construction must be skipped when nobody listens
+        if obs_hooks.subscribed():
+            obs_hooks.emit("mapping.place", node=node.name, chunk=chunk,
+                           n_chunks=n_chunks,
+                           grid=f"{mapping.grid_r}x{mapping.grid_c}",
+                           xbs=mapping.n_xbs, cores=p.cores,
+                           windows=windows)
+        return p
 
     def _epilogue(self, node: Node, graph: Graph, windows: int) -> float:
         """ALU cycles per window for directly-fused successor DCOM ops.
@@ -676,6 +687,11 @@ def run(graph: Graph, arch: CIMArch, *, use_pipeline: bool = True,
                         use_duplication=use_duplication)
     plan.notes["cg_budget"] = budget
     plan.notes["ping_pong"] = ping_pong
+    if obs_hooks.subscribed():
+        obs_hooks.emit("cg.plan", graph=graph.name, arch=arch.name,
+                       segments=len(segments), budget=budget,
+                       ping_pong=ping_pong,
+                       placements=len(plan.placements))
     return plan
 
 

@@ -15,8 +15,12 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import time
 from typing import Optional, Union
 
+from ..obs import hooks as obs_hooks
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import cg_opt, codegen, mvm_opt, vvm_opt
 from .abstraction import CIMArch, ComputingMode
 from .cg_opt import SchedulePlan
@@ -260,6 +264,7 @@ def compile_graph(
     if not arch.mode.allows(level):
         raise ValueError(mode_error(arch, level))
 
+    t0 = time.perf_counter()
     cache = cache if cache is not None else _COMPILE_CACHE
     key = compile_key(graph, arch, level=level, use_pipeline=use_pipeline,
                       use_duplication=use_duplication, binding=binding,
@@ -267,6 +272,8 @@ def compile_graph(
     if cache is not None:
         hit = cache.get(key)
         if hit is not None:    # schema-2 entries are stored with key set
+            _note_compile(graph, arch, level, key, cached=True,
+                          wall_s=time.perf_counter() - t0, plan=hit.plan)
             return hit
 
     def build(ping_pong: bool) -> SchedulePlan:
@@ -301,4 +308,37 @@ def compile_graph(
     result = CompileResult(plan=plan, program=program, key=key)
     if cache is not None:
         cache.put(key, result)
+    _note_compile(graph, arch, level, key, cached=False,
+                  wall_s=time.perf_counter() - t0, plan=plan)
     return result
+
+
+def _note_compile(graph, arch, level, key, *, cached, wall_s, plan) -> None:
+    """Telemetry for one ``compile_graph`` return (hit or fresh build).
+
+    Disabled telemetry costs two ``is None`` checks and one list
+    truthiness test; the span is drawn back from "now" so the compile
+    occupies its real wall interval on the compiler track.  The flow
+    start seeds the compile→dispatch arrow the executor's first
+    dispatch of this artifact closes (ids derive from the compile key
+    prefix on both sides — see ``cimsim.executor.lower``).
+    """
+    reg = obs_metrics.active()
+    if reg is not None:
+        reg.counter("compiles_total", workload=graph.name,
+                    cached=cached).inc()
+        reg.histogram("compile_wall_s", cached=cached).observe(wall_s)
+    tr = obs_trace.get_trace()
+    if tr is not None:
+        now = obs_trace.now_s()
+        tr.complete(obs_trace.COMPILER_TRACK, graph.name,
+                    f"compile:{graph.name}", "compile",
+                    now - wall_s, wall_s, level=level.value, cached=cached,
+                    segments=len(plan.segments), key=key[:12])
+        tr.flow_start(obs_trace.COMPILER_TRACK, graph.name,
+                      "artifact", "flow", now - wall_s / 2,
+                      flow_id=int(key[:12], 16), key=key[:12])
+    obs_hooks.emit("compile.done", graph=graph.name, arch=arch.name,
+                   key=key, cached=cached, wall_s=wall_s,
+                   level=level.value, segments=len(plan.segments),
+                   ping_pong=bool(plan.notes.get("ping_pong", False)))

@@ -20,6 +20,7 @@ import enum
 import math
 from typing import List
 
+from ..obs import hooks as obs_hooks
 from .abstraction import CIMArch
 from .graph import Node, weight_matrix_shape
 
@@ -104,9 +105,16 @@ def bind(node_or_rc, arch: CIMArch,
         cols_last = c - (per_slice_grid_c - 1) * xc
 
     rows_last = r - (grid_r - 1) * xr
-    return VXBMapping(r=r, c=c, binding=binding, col_slices=slices,
-                      grid_r=grid_r, grid_c=grid_c,
-                      rows_used_last=rows_last, cols_used_last=cols_last)
+    m = VXBMapping(r=r, c=c, binding=binding, col_slices=slices,
+                   grid_r=grid_r, grid_c=grid_c,
+                   rows_used_last=rows_last, cols_used_last=cols_last)
+    # gated at the call site: bind runs in DSE inner loops, so the
+    # payload must not be built unless a provenance subscriber is live
+    if obs_hooks.subscribed():
+        obs_hooks.emit("mapping.bind", r=r, c=c, binding=binding.value,
+                       col_slices=slices, grid_r=grid_r, grid_c=grid_c,
+                       n_xbs=m.n_xbs)
+    return m
 
 
 def bind_arrays(r, c, *, rows, cols, slices, b_to_xb):

@@ -53,6 +53,7 @@ import numpy as np
 
 from ..core.abstraction import CIMArch
 from ..core.graph import Graph
+from ..obs import metrics as obs_metrics
 from .cache import CompileCache
 from .runner import EvalJob, SweepResult, resolve_space, run_jobs
 from .search import RungLog, SearchResult, rung_prefix_graph
@@ -221,6 +222,7 @@ class AdaptiveSearch:
                     rest, size=min(n_explore, len(rest)), replace=False)]
             asked = sorted(exploit + explore)
         self.ask_log.append(tuple(asked))
+        obs_metrics.count("dse_ask_rounds_total", workload=self.graph.name)
         return asked
 
     # -- driving ---------------------------------------------------------
@@ -308,6 +310,9 @@ class AdaptiveSearch:
         by_score = feas[np.lexsort((feas, self._scores[feas]))]
         keep = min(len(feas), max(self.min_keep, self.prefix_keep))
         self.survivors = [int(i) for i in by_score[:keep]]
+        if self.survivors:
+            obs_metrics.count("dse_promotions_total", n=len(self.survivors),
+                              workload=self.graph.name)
         self.rung_log.append(RungLog(len(self.rung_log), "proxy",
                                      self.proxy_evals,
                                      len(self.survivors), 0))

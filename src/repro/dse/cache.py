@@ -50,6 +50,7 @@ from pathlib import Path
 from typing import Dict, Iterator, Optional
 
 from ..core.compiler import COMPILE_KEY_SCHEMA, CompileResult
+from ..obs import metrics as obs_metrics
 
 #: environment override for the on-disk cache location
 CACHE_DIR_ENV = "REPRO_COMPILE_CACHE_DIR"
@@ -242,11 +243,13 @@ class CompileCache:
             return
         if writer and writer != self.owner:
             self.foreign_hits += 1
+            obs_metrics.count("compile_cache_foreign_hits_total")
 
     def get(self, key: str) -> Optional[CompileResult]:
         """Full ``CompileResult`` for ``key``, or None."""
         if self._mem is not None and key in self._mem:
             self.hits += 1
+            obs_metrics.count("compile_cache_hits_total", layer="memory")
             self._touch(key)
             return self._mem[key]
         path = self._pkl(key)
@@ -258,8 +261,10 @@ class CompileCache:
             # changed shape under it (AttributeError/ImportError from
             # pickle): all degrade to a recompute, never an abort
             self.misses += 1
+            obs_metrics.count("compile_cache_misses_total")
             return None
         self.hits += 1
+        obs_metrics.count("compile_cache_hits_total", layer="disk")
         self._touch(key)
         self._count_origin(key)
         if self._mem is not None:
@@ -270,6 +275,8 @@ class CompileCache:
         """Metric bundle only — the cheap warm-sweep path (no unpickling)."""
         if key in self._mem_metrics:
             self.metrics_hits += 1
+            obs_metrics.count("compile_cache_metrics_hits_total",
+                              layer="memory")
             self._touch(key)
             return dict(self._mem_metrics[key])
         try:
@@ -277,8 +284,10 @@ class CompileCache:
                 metrics = json.load(f)
         except (OSError, json.JSONDecodeError):
             self.misses += 1
+            obs_metrics.count("compile_cache_misses_total")
             return None
         self.metrics_hits += 1
+        obs_metrics.count("compile_cache_metrics_hits_total", layer="disk")
         self._touch(key)
         self._count_origin(key)
         self._mem_metrics[key] = metrics
@@ -406,6 +415,7 @@ class CompileCache:
                 self._access.pop(key, None)
                 total -= size
                 self.evictions += 1
+                obs_metrics.count("compile_cache_evictions_total")
         self._disk_total = total
 
     def drop_memory(self) -> None:

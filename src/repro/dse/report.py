@@ -22,7 +22,20 @@ import dataclasses
 import json
 from typing import Any, Dict, List, Optional
 
+from ..obs import metrics as obs_metrics
+
 __all__ = ["Scorecard", "campaign_scorecard", "search_scorecard"]
+
+
+def _obs_meta(meta: Dict[str, Any]) -> Dict[str, Any]:
+    """Fold the live metrics registry's compile-cache and DSE series
+    into a scorecard's metadata (``obs_<series>`` keys) — when telemetry
+    is enabled, every scorecard shows what the process actually paid."""
+    reg = obs_metrics.active()
+    if reg is not None:
+        for series, v in reg.flat(prefix=("compile_cache_", "dse_")).items():
+            meta[f"obs_{series}"] = v
+    return meta
 
 
 def _fmt(v: Any) -> str:
@@ -113,7 +126,8 @@ def campaign_scorecard(campaign, title: str = "DSE campaign") -> Scorecard:
     if campaign.cache_stats is not None:
         for k, v in sorted(campaign.cache_stats.items()):
             meta[f"cache_{k}"] = v
-    return Scorecard(title=title, columns=columns, rows=rows, meta=meta)
+    return Scorecard(title=title, columns=columns, rows=rows,
+                     meta=_obs_meta(meta))
 
 
 def search_scorecard(result, name: str = "search",
@@ -137,4 +151,4 @@ def search_scorecard(result, name: str = "search",
         if v is not None:
             meta[extra] = v
     return Scorecard(title=title or f"{name} search", columns=columns,
-                     rows=rows, meta=meta)
+                     rows=rows, meta=_obs_meta(meta))

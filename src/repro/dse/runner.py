@@ -61,6 +61,8 @@ from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
 from ..core import compiler
 from ..core.abstraction import CIMArch
 from ..core.graph import Graph
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .cache import CompileCache
 from .space import DesignPoint, DesignSpace
 
@@ -255,7 +257,9 @@ def run_jobs(jobs: Iterable[EvalJob],
     issue proxy jobs repeatedly for the same (graph, arch, point)
     triples; by default memoization is scoped to this invocation.
     """
+    import time as _time
     jobs = list(jobs)
+    t0 = _time.perf_counter()
     proxy_jobs = [j for j in jobs if j.proxy]
     compile_jobs = [j for j in jobs if not j.proxy]
     results: List[SweepResult] = []
@@ -290,6 +294,14 @@ def run_jobs(jobs: Iterable[EvalJob],
                 # resync it from disk
                 cache.drop_memory()
     results.sort(key=lambda r: r.index)
+    obs_metrics.count("dse_jobs_total", n=len(jobs))
+    tr = obs_trace.get_trace()
+    if tr is not None and jobs:
+        dt = _time.perf_counter() - t0
+        graph = jobs[0].graph.name
+        tr.complete(obs_trace.DSE_TRACK, graph, f"rung:{graph}", "dse",
+                    obs_trace.now_s() - dt, dt, jobs=len(jobs),
+                    proxy=len(proxy_jobs), ok=sum(r.ok for r in results))
     return results
 
 

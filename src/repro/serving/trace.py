@@ -1,188 +1,10 @@
-"""Chrome-trace observability for the serving tier.
-
-``TraceRecorder`` collects Chrome Trace Event Format events (the JSON
-consumed by ``chrome://tracing`` and https://ui.perfetto.dev) from the
-fleet's hot paths — batcher queue waits, engine dispatch spans,
-weight-rewrite/migration events and per-chip utilization counters — so
-"where did the time go" is a drag-and-drop question, not a printf one.
-
-Mapping onto the trace model:
-
-  * **process (pid)** = one CIM chip (``chrome://tracing`` groups rows
-    by process; ``register_chip`` emits the ``process_name`` metadata);
-  * **thread (tid)**  = one tenant on that chip (``register_tenant``
-    emits ``thread_name``), plus tid 0 reserved for chip-level control
-    events (plan application, migration);
-  * **complete events (``ph: "X"``)** = spans: queue waits and engine
-    dispatches;
-  * **instant events (``ph: "i"``)** = points: admissions rejections,
-    re-plan triggers;
-  * **counter events (``ph: "C"``)** = per-chip utilization and queue
-    depth sampled by the cluster control loop.
-
-Units and clocks: the recorder's timeline is the *service clock* — the
-same caller-chosen ``now`` values (seconds) the fleet and batcher run
-on (wall time in production, synthetic in tests/benchmarks).  Event
-``ts``/``dur`` are emitted in **microseconds** as the trace format
-requires.  Durations measured in wall-clock seconds (engine dispatch
-time) are placed on that same timeline at the caller's ``now`` — under
-a wall clock the two coincide; under a synthetic clock the spans show
-the serving model's own accounting.  Cycle-denominated costs (weight
-rewrites) are attached as ``args``, never as span durations.
-
-Thread-safety: a recorder is plain mutable state owned by one fleet /
-cluster on one thread; share one recorder across chips of one cluster,
-not across clusters running concurrently.
+"""Compatibility shim — the Chrome-trace recorder moved to
+:mod:`repro.obs.trace` when observability became stack-wide (compiler,
+executor and DSE spans share the serving fleet's timeline).  Importing
+``TraceRecorder`` / ``validate_chrome_trace`` / ``load_trace`` from
+here keeps working; new code should import from ``repro.obs.trace``.
 """
-from __future__ import annotations
+from ..obs.trace import (TraceRecorder, load_trace,       # noqa: F401
+                         validate_chrome_trace)
 
-import json
-from pathlib import Path
-from typing import Dict, List, Optional, Union
-
-#: event phases the serving layer emits (subset of the trace format)
-_PHASES = ("X", "i", "C", "M")
-
-#: fields every emitted event carries (the format's required core)
-_REQUIRED = ("name", "ph", "ts", "pid", "tid")
-
-
-def _us(t_s: float) -> float:
-    """Service-clock seconds -> trace microseconds (float is allowed)."""
-    return round(t_s * 1e6, 3)
-
-
-class TraceRecorder:
-    """Accumulates Chrome-trace events for one fleet/cluster.
-
-    All ``*_s`` arguments are service-clock seconds (see module
-    docstring); ``args`` values must be JSON-serializable.  Not
-    thread-safe — one recorder per serving frontend.
-    """
-
-    def __init__(self):
-        self.events: List[dict] = []
-        self._pids: Dict[str, int] = {}          # chip name -> pid
-        self._tids: Dict[tuple, int] = {}        # (pid, tenant) -> tid
-
-    # -- registry --------------------------------------------------------
-    def register_chip(self, chip: str) -> int:
-        """Assign (or return) the pid for ``chip``; emits process_name
-        metadata on first registration."""
-        if chip not in self._pids:
-            pid = len(self._pids) + 1
-            self._pids[chip] = pid
-            self.events.append({"name": "process_name", "ph": "M",
-                                "ts": 0, "pid": pid, "tid": 0,
-                                "args": {"name": f"chip:{chip}"}})
-        return self._pids[chip]
-
-    def register_tenant(self, chip: str, tenant: str) -> int:
-        """Assign (or return) the tid for ``tenant`` on ``chip``; emits
-        thread_name metadata on first registration (tid 0 is reserved
-        for chip-level control events)."""
-        pid = self.register_chip(chip)
-        key = (pid, tenant)
-        if key not in self._tids:
-            tid = 1 + sum(1 for (p, _) in self._tids if p == pid)
-            self._tids[key] = tid
-            self.events.append({"name": "thread_name", "ph": "M",
-                                "ts": 0, "pid": pid, "tid": tid,
-                                "args": {"name": f"tenant:{tenant}"}})
-        return self._tids[key]
-
-    # -- emitters --------------------------------------------------------
-    def complete(self, chip: str, tenant: str, name: str, cat: str,
-                 ts_s: float, dur_s: float, **args) -> None:
-        """One span (``ph: "X"``): starts at ``ts_s``, lasts ``dur_s``
-        (service-clock seconds; negative durations are clamped to 0)."""
-        self.events.append({
-            "name": name, "cat": cat, "ph": "X",
-            "ts": _us(ts_s), "dur": _us(max(0.0, dur_s)),
-            "pid": self.register_chip(chip),
-            "tid": self.register_tenant(chip, tenant),
-            "args": args})
-
-    def instant(self, chip: str, name: str, cat: str, ts_s: float,
-                tenant: Optional[str] = None, **args) -> None:
-        """One point event (``ph: "i"``, thread scope); chip-level when
-        ``tenant`` is None (tid 0)."""
-        tid = (self.register_tenant(chip, tenant) if tenant is not None
-               else (self.register_chip(chip), 0)[1])
-        self.events.append({
-            "name": name, "cat": cat, "ph": "i", "s": "t",
-            "ts": _us(ts_s), "pid": self.register_chip(chip),
-            "tid": tid, "args": args})
-
-    def counter(self, chip: str, name: str, ts_s: float,
-                values: Dict[str, float]) -> None:
-        """One counter sample (``ph: "C"``): ``values`` maps series name
-        to value (e.g. ``{"utilization": 0.73}``)."""
-        self.events.append({
-            "name": name, "cat": "counter", "ph": "C",
-            "ts": _us(ts_s), "pid": self.register_chip(chip),
-            "tid": 0, "args": dict(values)})
-
-    # -- output ----------------------------------------------------------
-    def to_dict(self) -> dict:
-        """The JSON-object trace (``traceEvents`` array form) — the shape
-        both ``chrome://tracing`` and Perfetto load directly."""
-        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
-
-    def save(self, path: Union[str, Path]) -> Path:
-        """Write the trace as JSON; returns the path.  Load the file in
-        https://ui.perfetto.dev ("Open trace file") or chrome://tracing."""
-        path = Path(path)
-        path.write_text(json.dumps(self.to_dict()) + "\n", encoding="utf-8")
-        return path
-
-    def __len__(self) -> int:
-        return len(self.events)
-
-
-def validate_chrome_trace(trace: dict) -> None:
-    """Validate ``trace`` against the Chrome Trace Event Format subset
-    this layer emits; raises ``ValueError`` with the first violation.
-
-    Checks the JSON-object form (``traceEvents`` array), per-event
-    required fields, known phases, numeric non-negative timestamps,
-    ``dur`` on complete events, and ``args`` being JSON objects — the
-    properties Perfetto's importer actually relies on.
-    """
-    if not isinstance(trace, dict) or "traceEvents" not in trace:
-        raise ValueError("trace must be a JSON object with 'traceEvents'")
-    events = trace["traceEvents"]
-    if not isinstance(events, list):
-        raise ValueError("'traceEvents' must be an array")
-    for i, ev in enumerate(events):
-        if not isinstance(ev, dict):
-            raise ValueError(f"event {i}: not an object")
-        for field in _REQUIRED:
-            if field not in ev:
-                raise ValueError(f"event {i}: missing field {field!r}")
-        if ev["ph"] not in _PHASES:
-            raise ValueError(f"event {i}: unknown phase {ev['ph']!r}")
-        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
-            raise ValueError(f"event {i}: bad ts {ev['ts']!r}")
-        for field in ("pid", "tid"):
-            if not isinstance(ev[field], int):
-                raise ValueError(f"event {i}: {field} must be an int")
-        if ev["ph"] == "X":
-            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
-                raise ValueError(f"event {i}: complete event needs dur >= 0")
-        if ev["ph"] == "C" and not ev.get("args"):
-            raise ValueError(f"event {i}: counter event needs args values")
-        if "args" in ev and not isinstance(ev["args"], dict):
-            raise ValueError(f"event {i}: args must be an object")
-    # one timeline: metadata aside, events must carry registered pids
-    pids = {ev["pid"] for ev in events if ev["ph"] == "M"}
-    for i, ev in enumerate(events):
-        if ev["ph"] != "M" and pids and ev["pid"] not in pids:
-            raise ValueError(f"event {i}: pid {ev['pid']} never registered")
-
-
-def load_trace(path: Union[str, Path]) -> dict:
-    """Read a trace JSON file and validate it; returns the trace dict."""
-    trace = json.loads(Path(path).read_text(encoding="utf-8"))
-    validate_chrome_trace(trace)
-    return trace
+__all__ = ["TraceRecorder", "validate_chrome_trace", "load_trace"]

@@ -1,7 +1,7 @@
 """The docs stay true: every fenced ``python`` block in the guides
-(docs/DSE.md, docs/SERVING.md, docs/FLEET.md, docs/KERNELS.md)
-executes, and every relative markdown link in README.md / docs/
-resolves.
+(docs/DSE.md, docs/SERVING.md, docs/FLEET.md, docs/KERNELS.md,
+docs/FAULTS.md, docs/OBSERVABILITY.md) executes, and every relative
+markdown link in README.md / docs/ resolves.
 
 Blocks run in file order inside one shared namespace (like a reader
 pasting them into one session), with the compile cache pointed at a
@@ -103,6 +103,30 @@ def test_faults_doc_snippets_execute(tmp_path, monkeypatch):
     assert ns["budget_error"].retire_cols > 0
     assert ns["lost"] == 0                # chip kill drops nothing
     assert ns["cluster"].chip_kills == 1
+
+
+def test_observability_doc_snippets_execute(tmp_path, monkeypatch):
+    import tempfile
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", str(tmp_path / "cache"))
+    monkeypatch.setattr(tempfile, "tempdir", str(tmp_path))
+    blocks = python_blocks(REPO / "docs" / "OBSERVABILITY.md")
+    assert len(blocks) >= 5, \
+        "docs/OBSERVABILITY.md lost its executable snippets"
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        block = block.replace("/tmp/cim_timeline.json",
+                              str(tmp_path / "cim_timeline.json"))
+        code = compile(block, f"docs/OBSERVABILITY.md[python block {i}]",
+                       "exec")
+        exec(code, ns)   # noqa: S102 — executing our own documentation
+    # the guide's narrative claims, re-checked here explicitly
+    assert "requests_total" in ns["prom"]
+    assert any(k.startswith("requests_total") for k in ns["flat"])
+    assert ns["coverage"] == 1.0          # explain covers every node
+    assert any(k.startswith("executor_dispatches_total")
+               for k in ns["profile"])
+    assert {"compiler", "executor", "chip:isaac-8c"} <= ns["tracks"]
+    assert ns["disabled_ok"]              # off is really off
 
 
 def test_architecture_doc_mentions_every_package():

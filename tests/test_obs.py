@@ -1,0 +1,325 @@
+"""Stack-wide telemetry: registry determinism, zero-overhead-disabled
+semantics, compile provenance coverage, and the merged Perfetto
+timeline (compiler + executor + DSE + fleet + fault events)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.cimsim import executor
+from repro.cimsim.faults import FaultModel, fault_aware_compile
+from repro.cimsim.functional import make_input, make_weights
+from repro.core import compiler
+from repro.core.abstraction import get_arch
+from repro.dse import CompileCache, DesignSpace, adaptive_search
+from repro.dse.report import search_scorecard
+from repro.obs import MetricsRegistry, hooks, metrics, trace
+from repro.obs.explain import explain_compile
+from repro.obs.trace import (TraceRecorder, load_trace,
+                             validate_chrome_trace)
+from repro.serving import CimFleet, CimRequest, TenantSpec
+from repro.workloads import get_workload
+
+TOY = get_arch("toy")
+ISAAC = get_arch("isaac-baseline")
+MLP = get_workload("tiny_mlp")
+
+
+@pytest.fixture
+def telemetry():
+    """Enable the registry + process-wide trace; always torn down."""
+    reg = metrics.enable()
+    tr = trace.install()
+    try:
+        yield reg, tr
+    finally:
+        metrics.disable()
+        trace.uninstall()
+
+
+def _compile_run(batch=2, seed=0):
+    res = compiler.compile_graph(MLP, TOY)
+    exe = executor.lower(res.plan, res.program)
+    w = make_weights(MLP, seed)
+    singles = [make_input(MLP, seed + i) for i in range(batch)]
+    x = {t: np.stack([s[t] for s in singles]) for t in singles[0]}
+    return exe.run_batch(x, w)
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_instruments_and_deterministic_snapshots():
+    def feed(reg):
+        reg.counter("requests_total", route="xla").inc()
+        reg.counter("requests_total", route="xla").inc(2)
+        reg.counter("requests_total", route="pallas").inc()
+        reg.gauge("pool_bytes", chip="c0").set(512)
+        for v in (0.002, 0.04, 3.0):
+            reg.histogram("dispatch_s").observe(v)
+        return reg
+    a, b = feed(MetricsRegistry()), feed(MetricsRegistry())
+    assert a.to_json() == b.to_json()       # byte-identical exposition
+    snap = a.snapshot()
+    assert snap["counters"]['requests_total{route="xla"}'] == 3
+    assert snap["counters"]['requests_total{route="pallas"}'] == 1
+    assert snap["gauges"]['pool_bytes{chip="c0"}'] == 512
+    h = snap["histograms"]["dispatch_s"]
+    assert h["count"] == 3 and h["buckets"]["+Inf"] == 3
+    assert h["buckets"]["0.01"] == 1        # cumulative le-buckets
+    assert h["buckets"]["0.1"] == 2
+    with pytest.raises(ValueError, match="cannot decrease"):
+        a.counter("requests_total", route="xla").inc(-1)
+    assert len(a) == 4                      # 3 counter/gauge series + 1 hist
+
+
+def test_registry_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("compiles_total", cached=False).inc(2)
+    reg.gauge("depth").set(1.5)
+    reg.histogram("lat_s", bounds=(0.1, 1.0)).observe(0.05)
+    text = reg.to_prometheus()
+    assert "# TYPE compiles_total counter" in text
+    assert 'compiles_total{cached="False"} 2' in text
+    assert "# TYPE depth gauge" in text and "depth 1.5" in text
+    assert "# TYPE lat_s histogram" in text
+    assert 'lat_s_bucket{le="0.1"} 1' in text
+    assert 'lat_s_bucket{le="+Inf"} 1' in text
+    assert "lat_s_count 1" in text
+
+
+def test_registry_absorbs_legacy_stat_bundles(tmp_path):
+    reg = MetricsRegistry()
+    cache = CompileCache(tmp_path / "cc")
+    compiler.compile_graph(MLP, TOY, cache=cache)
+    compiler.compile_graph(MLP, TOY, cache=cache)
+    reg.absorb("compile_cache", cache.stats(), owner="me")
+    flat = reg.flat("compile_cache_")
+    assert flat['compile_cache_hits{owner="me"}'] == 1
+    assert flat['compile_cache_misses{owner="me"}'] == 1
+    # executor stats: numeric + bool fields surface, strings are skipped
+    res = compiler.compile_graph(MLP, TOY)
+    exe = executor.lower(res.plan, res.program)
+    reg.absorb("executor", dataclasses.asdict(exe.stats))
+    flat = reg.flat("executor_")
+    assert flat["executor_cim_nodes"] == 2
+    assert flat["executor_streamed"] in (0.0, 1.0)
+    assert "executor_kernel_mode" not in flat
+
+
+def test_flat_prefix_filter():
+    reg = MetricsRegistry()
+    reg.counter("dse_rounds_total").inc()
+    reg.counter("compile_cache_hits_total").inc()
+    reg.counter("other_total").inc()
+    both = reg.flat(prefix=("compile_cache_", "dse_"))
+    assert set(both) == {"compile_cache_hits_total", "dse_rounds_total"}
+
+
+# ---------------------------------------------- disabled-by-default
+
+def test_disabled_by_default_bitexact_and_zero_events():
+    assert metrics.active() is None and trace.get_trace() is None
+    executor.clear_lower_cache()
+    base = _compile_run()
+
+    reg = metrics.enable()
+    tr = trace.install()
+    try:
+        executor.clear_lower_cache()
+        on = _compile_run()
+        assert len(reg) > 0 and len(tr) > 0
+        n_events = len(tr.events)
+        snap = reg.to_json()
+    finally:
+        metrics.disable()
+        trace.uninstall()
+
+    executor.clear_lower_cache()
+    off = _compile_run()
+    for t in base:
+        np.testing.assert_array_equal(base[t], on[t])
+        np.testing.assert_array_equal(base[t], off[t])
+    # disabled runs add zero events and zero counters to the old sinks
+    assert len(tr.events) == n_events
+    assert reg.to_json() == snap
+
+
+# ------------------------------------------------------ one timeline
+
+def test_unified_timeline_roundtrip(tmp_path, telemetry):
+    reg, tr = telemetry
+    executor.clear_lower_cache()
+
+    # compiler + executor + fault events on the reserved tracks
+    _compile_run()
+    fault_aware_compile(MLP, TOY, FaultModel(seed=0, stuck_cell_rate=0.02))
+
+    # a DSE rung batch on the dse track
+    space = DesignSpace(TOY, arch_axes={"xb.xb_size": [(32, 128),
+                                                       (64, 128)]})
+    adaptive_search(MLP, space, cache=CompileCache(tmp_path / "cc"),
+                    seed=3, batch=2)
+
+    # serving events merge in by handing the fleet the same recorder
+    fleet = CimFleet([TenantSpec("mlp", MLP, traffic=1.0)],
+                     ISAAC.subarch(8, "isaac-8c"), max_wait_s=0.0,
+                     trace=tr)
+    reqs = [CimRequest(rid=i, model="mlp", inputs=make_input(MLP, i))
+            for i in range(3)]
+    assert len(fleet.serve(reqs, now=0.0)) == 3
+
+    validate_chrome_trace(tr.to_dict())
+    labels = {ev["args"]["name"]: ev["pid"] for ev in tr.events
+              if ev["ph"] == "M" and ev["name"] == "process_name"}
+    # distinct Perfetto process rows per tier, plus the serving chip row
+    assert {"compiler", "executor", "dse", "chip:isaac-8c"} <= set(labels)
+    assert len(set(labels.values())) == len(labels)
+    by_pid = {}
+    for ev in tr.events:
+        if ev["ph"] != "M":
+            by_pid.setdefault(ev["pid"], set()).add(ev.get("cat"))
+    assert "compile" in by_pid[labels["compiler"]]
+    assert "faults" in by_pid[labels["compiler"]]
+    assert "executor" in by_pid[labels["executor"]]
+    assert "dse" in by_pid[labels["dse"]]
+    assert "engine" in by_pid[labels["chip:isaac-8c"]]
+    # tenants get their own tids under each track
+    exec_tids = {ev["tid"] for ev in tr.events
+                 if ev["pid"] == labels["executor"] and ev["ph"] != "M"}
+    assert exec_tids and 0 not in exec_tids
+
+    # the compile→dispatch flow arrow shares one id across tracks
+    flows = [ev for ev in tr.events if ev["ph"] in ("s", "f")]
+    ids = {}
+    for ev in flows:
+        ids.setdefault(ev["id"], set()).add(ev["ph"])
+    assert any(phases == {"s", "f"} for phases in ids.values())
+
+    path = tr.save(tmp_path / "timeline.json")
+    loaded = load_trace(path)               # validates on load
+    assert loaded["traceEvents"] == tr.to_dict()["traceEvents"]
+    # registry saw every tier too
+    flat = reg.flat()
+    assert any(k.startswith("compiles_total") for k in flat)
+    assert any(k.startswith("executor_dispatches_total") for k in flat)
+    assert any(k.startswith("dse_jobs_total") for k in flat)
+    assert any(k.startswith("fault_compile_attempts_total") for k in flat)
+
+
+def test_trace_save_is_atomic(tmp_path):
+    tr = TraceRecorder()
+    tr.complete("compiler", "g", "compile:g", "compile", 0.0, 0.1)
+    p = tr.save(tmp_path / "t.json")
+    first = p.read_text()
+    tr.complete("compiler", "g", "compile:g", "compile", 0.2, 0.1)
+    tr.save(p)                              # overwrite in place
+    assert p.read_text() != first
+    load_trace(p)
+    leftovers = [q for q in p.parent.iterdir() if q.suffix == ".tmp"]
+    assert leftovers == []                  # temp file renamed, not leaked
+
+
+def test_validate_counter_and_flow_shapes():
+    def ev(**kw):
+        base = {"name": "x", "ts": 0, "pid": 1, "tid": 0}
+        base.update(kw)
+        return {"traceEvents": [
+            {"name": "process_name", "ph": "M", "ts": 0, "pid": 1,
+             "tid": 0, "args": {"name": "p"}}, base]}
+    with pytest.raises(ValueError, match="counter event needs args"):
+        validate_chrome_trace(ev(ph="C", args={}))
+    with pytest.raises(ValueError, match="must be a number"):
+        validate_chrome_trace(ev(ph="C", args={"depth": "high"}))
+    with pytest.raises(ValueError, match="must be a number"):
+        validate_chrome_trace(ev(ph="C", args={"up": True}))
+    validate_chrome_trace(ev(ph="C", args={"depth": 3}))
+    with pytest.raises(ValueError, match="needs an 'id'"):
+        validate_chrome_trace(ev(ph="s", args={}))
+    validate_chrome_trace(ev(ph="f", **{"id": 7, "bp": "e"}))
+    tr = TraceRecorder()
+    with pytest.raises(ValueError, match="flow phase"):
+        tr.flow("X", "c", "t", "n", "cat", 0.0, 1)
+
+
+def test_serving_shim_reexports_obs_trace():
+    import repro.serving.trace as shim
+    from repro.obs import trace as obs_trace
+    assert shim.TraceRecorder is obs_trace.TraceRecorder
+    assert shim.validate_chrome_trace is obs_trace.validate_chrome_trace
+
+
+# ------------------------------------------------------------ explain
+
+def test_explain_covers_every_resnet18_node():
+    report = explain_compile(get_workload("resnet18"), ISAAC)
+    assert report.coverage == 1.0           # acceptance bar: 100 %
+    assert len(report.rows) == report.meta["nodes"]
+    for row in report.rows:
+        assert set(report.columns) <= set(row)
+    cim = [r for r in report.rows if r["tier"] != "digital"]
+    assert len(cim) == report.meta["cim_nodes"]
+    assert all(r["xbs"] > 0 and r["grid"] != "-" for r in cim)
+    assert report.meta["cache_hit"] is False
+    assert report.meta["compile_wall_s"] > 0
+    assert report.meta["key"]
+    md = report.to_markdown()
+    assert "|node" in md and "conv1" in md
+    parsed = json.loads(report.to_json())
+    assert parsed["meta"]["workload"] == "resnet18"
+
+
+def test_explain_fault_provenance_and_cache_hit(tmp_path):
+    fm = FaultModel(seed=0, stuck_cell_rate=0.02)
+    report = explain_compile(MLP, TOY, fault_model=fm)
+    assert report.meta["fault_retire_attempts"] >= 1
+    assert report.coverage == 1.0
+    cache = CompileCache(tmp_path / "cc")
+    explain_compile(MLP, TOY, cache=cache)
+    again = explain_compile(MLP, TOY, cache=cache)
+    assert again.meta["cache_hit"] is True
+
+
+def test_hooks_capture_compile_provenance_events():
+    seen = []
+    unsub = hooks.subscribe(lambda kind, payload: seen.append(kind))
+    try:
+        assert hooks.subscribed()
+        compiler.compile_graph(MLP, TOY)
+    finally:
+        unsub()
+    kinds = set(seen)
+    assert {"mapping.bind", "mapping.place", "cg.plan",
+            "compile.done"} <= kinds
+    n = len(seen)
+    compiler.compile_graph(MLP, TOY)        # after unsubscribe: silence
+    assert len(seen) == n and not hooks.subscribed()
+
+
+# ------------------------------------------------- satellite counters
+
+def test_cache_and_dse_counters_reach_scorecards(tmp_path, telemetry):
+    reg, _ = telemetry
+    cache = CompileCache(tmp_path / "cc")
+    compiler.compile_graph(MLP, TOY, cache=cache)
+    compiler.compile_graph(MLP, TOY, cache=cache)
+    flat = reg.flat()
+    assert flat['compile_cache_hits_total{layer="memory"}'] == 1
+    assert flat["compile_cache_misses_total"] == 1
+
+    space = DesignSpace(TOY, arch_axes={"xb.xb_size": [(32, 128),
+                                                       (64, 128)]})
+    result = adaptive_search(MLP, space,
+                             cache=CompileCache(tmp_path / "dse"),
+                             seed=1, batch=2)
+    flat = reg.flat()
+    assert flat['dse_ask_rounds_total{workload="tiny_mlp"}'] \
+        == result.ask_rounds
+    assert flat['dse_promotions_total{workload="tiny_mlp"}'] >= 1
+    card = search_scorecard(result, "tiny_mlp")
+    obs_keys = [k for k in card.meta if k.startswith("obs_")]
+    assert any("dse_ask_rounds_total" in k for k in obs_keys)
+    assert any("compile_cache_" in k for k in obs_keys)
+    metrics.disable()
+    clean = search_scorecard(result, "tiny_mlp")
+    assert not any(k.startswith("obs_") for k in clean.meta)
